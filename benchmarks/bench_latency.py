@@ -1,0 +1,50 @@
+"""Fig. 5 reproduction: average TTFT + end-to-end latency per (model,
+dataset, policy), on both hardware profiles (edge-24G / edge-48G class).
+
+CSV columns: name,us_per_call,derived — us_per_call is the simulated mean
+per-decode-step latency; derived is "<ttft_s>/<e2e_s>/<speedup_vs_odf>".
+"""
+from __future__ import annotations
+
+import dataclasses
+import numpy as np
+
+from benchmarks.common import DATASETS, POLICIES, build_artifacts, replay
+from repro.core.simulator import HW
+
+HW_PROFILES = {
+    "a5000": HW(),
+    "a6000": dataclasses.replace(HW(), name="edge-gpu-48g", flops=38.7e12,
+                                 hbm_bw=768e9, mem_budget=48e9),
+}
+
+
+def run(models=("mixtral-8x7b", "mixtral-8x22b", "qwen3-30b-a3b",
+                "deepseekmoe-16b"), datasets=DATASETS, quick=False):
+    rows = []
+    hw_items = list(HW_PROFILES.items())[:1] if quick else \
+        list(HW_PROFILES.items())
+    for m in models:
+        for d in datasets:
+            art = build_artifacts(m, d)
+            for hw_name, hw in hw_items:
+                base = None
+                for pol in POLICIES:
+                    sims = replay(art, pol, hw=hw)
+                    ttft = float(np.mean([s.ttft for s in sims]))
+                    e2e = float(np.mean([s.e2e for s in sims]))
+                    step_us = float(np.mean(
+                        [s.step_latencies.mean() for s in sims])) * 1e6
+                    if pol == "odf":
+                        base = (ttft, e2e)
+                    sp_t = base[0] / ttft
+                    sp_e = base[1] / e2e
+                    rows.append((f"latency/{m}/{d}/{hw_name}/{pol}", step_us,
+                                 f"ttft={ttft:.3f}s,e2e={e2e:.3f}s,"
+                                 f"ttft_x={sp_t:.2f},e2e_x={sp_e:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,38 @@
+"""Table II reproduction: peak memory per (model, policy) + GPU-only
+reference. Byte-accounted from policy residency (CacheState.peak_bytes) +
+non-expert weights + KV cache, under the paper's quantization."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import POLICIES, build_artifacts, replay
+from repro.configs.paper_models import PAPER_MODELS, QUANT_BYTES
+from repro.core.simulator import ModelCosts
+
+
+def gpu_only_bytes(model: str) -> float:
+    cfg = PAPER_MODELS[model]
+    q = QUANT_BYTES[model]
+    costs = ModelCosts(cfg, quant_bytes=q)
+    experts = cfg.n_layers * cfg.n_experts * costs.expert_bytes
+    return experts + costs.nonexpert_resident_bytes()
+
+
+def run(models=("mixtral-8x7b", "mixtral-8x22b", "qwen3-30b-a3b",
+                "deepseekmoe-16b"), quick=False):
+    rows = []
+    for m in models:
+        art = build_artifacts(m, "squad")
+        for pol in POLICIES:
+            sims = replay(art, pol)
+            peak = float(np.max([s.peak_bytes for s in sims]))
+            rows.append((f"memory/{m}/{pol}", peak / 1e6,
+                         f"peak_gb={peak / 1e9:.2f}"))
+        rows.append((f"memory/{m}/gpu_only", gpu_only_bytes(m) / 1e6,
+                     f"peak_gb={gpu_only_bytes(m) / 1e9:.2f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,175 @@
+"""Shared benchmark substrate: trace collection, predictor training, policy
+construction, and cached artifacts under results/bench/.
+
+Pipeline per (paper model, dataset):
+  1. Build the trace-scale variant (same L/E/k), init params.
+  2. Offline preprocess: run the live engine (ODF schedule) over the
+     dataset's prompt workload, record per-token activation paths (§IV-A).
+  3. Build popularity/affinity, train the ExpertMLP (§IV-B).
+  4. Serve held-out requests with each policy through the same engine to get
+     real routing + hit/miss behaviour, then replay through the two-stream
+     simulator with the full-scale model's costs (§VI).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import pickle
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.configs.paper_models import (PAPER_MODELS, QUANT_BYTES,
+                                        trace_scale)
+from repro.core.predictor import TrainedPredictor, train_predictor
+from repro.core.scheduler import make_scheduler
+from repro.core.simulator import HW, ModelCosts, simulate_request
+from repro.core.state import StateConstructor
+from repro.core.tracer import ExpertsTracer, TraceStats
+from repro.data.pipeline import PromptWorkload, orca_like, squad_like
+from repro.models.model import build
+from repro.serving.engine import MoEServingEngine, collect_traces
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+POLICIES = ("odf", "lfp", "mif", "duo", "duo+")
+DATASETS = ("squad", "orca")
+
+
+def dataset_spec(name: str, vocab: int):
+    return squad_like(vocab) if name == "squad" else orca_like(vocab)
+
+
+@dataclasses.dataclass
+class BenchArtifacts:
+    model: str
+    dataset: str
+    cfg_full: ArchConfig
+    cfg_trace: ArchConfig
+    stats: TraceStats
+    predictor: TrainedPredictor
+    predictor_history: dict
+    eval_results: Dict[str, list]   # policy -> list[RequestResult]
+    wall: Dict[str, float]
+
+
+def _cache_path(model: str, dataset: str, tag: str) -> str:
+    os.makedirs(RESULTS, exist_ok=True)
+    return os.path.join(RESULTS, f"{model}__{dataset}__{tag}.pkl")
+
+
+def build_artifacts(model: str, dataset: str, *, n_trace_requests: int = 48,
+                    n_eval_requests: int = 8, max_new: int = 12,
+                    epochs: int = 15, prompt_cap: int = 48,
+                    train_steps: int = 60,
+                    refresh: bool = False) -> BenchArtifacts:
+    path = _cache_path(model, dataset, "artifacts")
+    if os.path.exists(path) and not refresh:
+        with open(path, "rb") as f:
+            return pickle.load(f)
+
+    import dataclasses as _dc
+    cfg_full = PAPER_MODELS[model]
+    # large expert pools are ~10x more engine work per request on this
+    # 1-core container; shrink the trace budget (predictor quality saturates
+    # well before this for the synthetic workloads)
+    if cfg_full.n_experts >= 64 or cfg_full.n_layers >= 48:
+        n_trace_requests = min(n_trace_requests, 20)
+        n_eval_requests = min(n_eval_requests, 6)
+        max_new = min(max_new, 8)
+        epochs = min(epochs, 8)
+        train_steps = min(train_steps, 40)
+    cfg_t = _dc.replace(trace_scale(cfg_full), router_aux_loss=0.001)
+    bundle = build(cfg_t)
+    params = bundle.init(jax.random.PRNGKey(0))
+
+    wl = PromptWorkload(dataset_spec(dataset, cfg_t.vocab), seed=7)
+    wall = {}
+
+    # Short LM pre-training on the workload so the router develops the
+    # cluster-conditioned popularity/affinity structure trained MoEs show
+    # (traces from a random router would understate predictability).
+    if train_steps:
+        import jax as _jax
+        from repro.training.optimizer import AdamW
+        from repro.training.train_loop import make_train_step
+        t0 = time.time()
+        opt = AdamW(lr=1e-3, weight_decay=0.01)
+        ost = opt.init(params)
+        step = _jax.jit(make_train_step(bundle, opt))
+        rng = np.random.default_rng(3)
+        first = last = None
+        for i in range(train_steps):
+            rows = []
+            for _ in range(8):
+                t = np.concatenate([wl.prompt()[0], wl.prompt()[0],
+                                    wl.prompt()[0]])[:96]
+                rows.append(np.pad(t, (0, 96 - len(t))))
+            toks = np.stack(rows)
+            params, ost, m = step(params, ost, {"tokens": jnp.asarray(toks)})
+            if i == 0:
+                first = float(m["loss"])
+            last = float(m["loss"])
+        wall["pretrain_s"] = time.time() - t0
+        wall["pretrain_loss"] = (first, last)
+
+    # offline preprocess: trace collection (paper: ~2.5% of the dataset)
+    t0 = time.time()
+    prompts = [p[:prompt_cap] for p, _ in wl.prompts(n_trace_requests)]
+    tracer, _ = collect_traces(cfg_t, params, prompts, max_new=max_new)
+    stats = tracer.stats()
+    wall["trace_s"] = time.time() - t0
+
+    # predictor training
+    t0 = time.time()
+    sc = StateConstructor(stats)
+    X, Y = sc.build_dataset(tracer.as_array())
+    ws = 1.0 if cfg_t.n_experts >= 32 else 0.25
+    predictor, hist = train_predictor(jax.random.PRNGKey(1), X, Y,
+                                      cfg_t.top_k, width_scale=ws,
+                                      epochs=epochs, batch=256)
+    wall["train_s"] = time.time() - t0
+
+    # held-out serving under each policy (real engine; real hits/misses)
+    t0 = time.time()
+    eval_prompts = [p[:prompt_cap] for p, _ in wl.prompts(n_eval_requests)]
+    eval_results = {}
+    for pol in POLICIES:
+        eng = MoEServingEngine(cfg_t, params, policy=pol, stats=stats,
+                               predictor=predictor)
+        eval_results[pol] = [eng.serve(p, max_new=max_new)
+                             for p in eval_prompts]
+    wall["eval_s"] = time.time() - t0
+
+    art = BenchArtifacts(model, dataset, cfg_full, cfg_t, stats, predictor,
+                         hist, eval_results, wall)
+    with open(path, "wb") as f:
+        pickle.dump(art, f)
+    return art
+
+
+def replay(art: BenchArtifacts, policy: str, hw: HW | None = None,
+           seq_len: int = 512):
+    """Replay the engine's eval traces through the simulator with FULL-scale
+    costs. Returns list of SimResult."""
+    hw = hw or HW()
+    costs = ModelCosts(art.cfg_full, quant_bytes=QUANT_BYTES[art.model])
+    out = []
+    for r in art.eval_results[policy]:
+        sched = make_scheduler(
+            policy, art.cfg_full.n_layers, art.cfg_full.n_experts,
+            art.cfg_full.top_k, int(costs.expert_bytes), stats=art.stats,
+            predictor=art.predictor,
+            state_constructor=StateConstructor(art.stats))
+        out.append(simulate_request(sched, costs, hw, r.prefill_active,
+                                    r.decode_trace, seq_len=seq_len))
+    return out
+
+
+def all_artifacts(models=None, datasets=DATASETS, **kw):
+    models = models or list(PAPER_MODELS)
+    return {(m, d): build_artifacts(m, d, **kw)
+            for m in models for d in datasets}

@@ -1,0 +1,224 @@
+"""Generate EXPERIMENTS.md from the dry-run artifacts + benchmark caches.
+
+Sections:
+  §Dry-run          — every (arch x shape x mesh) lower+compile result
+  §Roofline         — three terms, bottleneck, MODEL_FLOPS ratio (single-pod)
+  §Perf             — baseline vs optimized A/B for the hillclimb pairs,
+                      with the hypothesis log (hand-written in PERF_LOG)
+  §Paper-validation — Fig5/6/7 + Table II/III reproductions vs paper claims
+
+Run:  PYTHONPATH=src:. python -m benchmarks.make_experiments
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Optional
+
+from benchmarks.roofline import (full_table, load_record, model_flops,
+                                 roofline_terms)
+from repro.configs.base import INPUT_SHAPES, get_config, pairs
+from repro.launch.mesh import PEAK_FLOPS_BF16
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+OUT = os.path.join(ROOT, "EXPERIMENTS.md")
+
+HILLCLIMBS = [
+    # (arch, shape, opts-suffix, why chosen)
+    ("gemma3-1b", "prefill_32k", "opt-static_window",
+     "worst roofline fraction / useful ratio (window-oblivious attention)"),
+    ("qwen3-1.7b", "train_4k", "opt-seq_parallel",
+     "most collective-bound (highest collective/dominant ratio)"),
+    ("kimi-k2-1t-a32b", "decode_32k", "opt-active_gather",
+     "most representative of the paper's technique: expert-weight movement "
+     "during decode"),
+]
+
+
+def fmt_bytes(b) -> str:
+    if b is None:
+        return "-"
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6)):
+        if abs(b) >= div:
+            return f"{b / div:.2f}{unit}"
+    return f"{b:.0f}B"
+
+
+def sec_dryrun() -> str:
+    lines = [
+        "## §Dry-run\n",
+        "Every applicable (architecture x input-shape) pair lowers and "
+        "compiles on BOTH production meshes (16x16 = 256 chips; 2x16x16 = "
+        "512 chips). `temp` is XLA's per-device temp allocation "
+        "(`memory_analysis`), `args` the per-device parameter+optimizer+"
+        "cache bytes; `coll` the per-device collective payload from the "
+        "loop-aware HLO walk (launch/hlo_cost.py). Train pairs use adaptive "
+        "microbatch gradient accumulation (4-16 way by model size) and "
+        "conditional FSDP/ZeRO-3 (params+moments data-sharded when state "
+        ">8 GB/chip). Decode/prefill caches shard per DESIGN.md SS4.\n",
+        "| arch | shape | mesh | lower | compile | args/dev | temp/dev |"
+        " HLO flops/dev | HLO bytes/dev | collectives |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    n_ok = n_all = 0
+    for cfg, shape in pairs():
+        for mesh in ("single", "multi"):
+            rec = load_record(cfg.name, shape.name, mesh)
+            n_all += 1
+            if rec is None:
+                lines.append(f"| {cfg.name} | {shape.name} | {mesh} | "
+                             f"MISSING | | | | | | |")
+                continue
+            if not rec.get("ok"):
+                lines.append(f"| {cfg.name} | {shape.name} | {mesh} | FAIL: "
+                             f"{rec.get('error', '?')[:60]} | | | | | | |")
+                continue
+            n_ok += 1
+            m = rec.get("memory", {})
+            hc = rec.get("hlo_cost", {})
+            coll = rec.get("collectives", {}) or {}
+            cs = ", ".join(f"{k}x{int(v['count'])}({fmt_bytes(v['bytes'])})"
+                           for k, v in sorted(coll.items())) or "none"
+            lines.append(
+                f"| {cfg.name} | {shape.name} | {mesh} | {rec['lower_s']}s | "
+                f"{rec.get('compile_s')}s | "
+                f"{fmt_bytes(m.get('argument_bytes'))} | "
+                f"{fmt_bytes(m.get('temp_bytes'))} | "
+                f"{hc.get('flops', 0):.3e} | {fmt_bytes(hc.get('bytes'))} | "
+                f"{cs} |")
+    lines.insert(1, f"\n**{n_ok}/{n_all} pair-mesh combinations compile "
+                 "successfully.**\n")
+    return "\n".join(lines) + "\n"
+
+
+def sec_roofline() -> str:
+    lines = [
+        "## §Roofline (single-pod 16x16, per device)\n",
+        "Terms: compute = HLO_FLOPs / 197 TFLOP/s; memory = HLO_bytes / "
+        "819 GB/s; collective = effective ICI bytes (ring factors, g=16) / "
+        "50 GB/s. `useful` = MODEL_FLOPS (6*N_active*D train, 2*N_active*D "
+        "inference) / HLO_FLOPs — the fraction of compiled compute that is "
+        "model math (captures remat recompute, causal-mask waste, capacity "
+        "overprovisioning). `rl_frac` = (MODEL_FLOPS/peak) / dominant term "
+        "— achieved fraction of the ideal compute roofline.\n",
+        "Methodology notes: (1) XLA's CPU backend promotes bf16 dots to f32 "
+        "— weight/activation traffic in these numbers is ~2x what the bf16-"
+        "native TPU backend moves; §Perf compares like against like. "
+        "(2) The jnp chunked-attention path materializes its logit tiles to "
+        "HBM; the Pallas flash_attention kernel keeps them in VMEM — the "
+        "memory term here is the *pre-kernel* bound, and the kernels are "
+        "exactly the fix (validated in tests/test_kernels.py).\n",
+        "| arch | shape | compute_s | memory_s | collective_s | bottleneck |"
+        " useful | rl_frac | what would move the dominant term |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    fixes = {
+        ("ssm", "train_4k"): "Pallas ssd_scan (keeps decay tiles in VMEM)",
+        ("hybrid", "train_4k"): "Pallas ssd_scan + flash attention",
+    }
+    for r in full_table("single"):
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | MISSING | | | | | | |")
+            continue
+        cfg = get_config(r["arch"].replace("-", "_").replace(".", "_")
+                         if False else r["arch"])
+        if r["shape"].startswith("decode") or r["shape"] == "long_500k":
+            fix = ("stream only routed experts (active-gather, §Perf H3)"
+                   if cfg.is_moe else
+                   "KV-cache quantization / head-sharded cache reads")
+        elif cfg.is_moe:
+            fix = "Pallas expert_ffn (VMEM-resident dispatch buffers) + bf16 tiles"
+        elif cfg.sliding_window:
+            fix = "window-restricted attention (§Perf H1)"
+        elif cfg.family in ("ssm", "hybrid"):
+            fix = fixes.get((cfg.family, r["shape"]),
+                            "Pallas ssd_scan / flash attention")
+        else:
+            fix = "Pallas flash attention (VMEM tiles) + bf16 logits"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"{r['bottleneck']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_frac']:.3f} | {fix} |")
+    return "\n".join(lines) + "\n"
+
+
+def _pair_summary(arch, shape, suffix: Optional[str]) -> Optional[dict]:
+    mesh = "single" + (f"__{suffix}" if suffix else "")
+    rec = load_record(arch, shape, mesh)
+    if rec is None or not rec.get("ok"):
+        return None
+    t = roofline_terms(rec)
+    cfg = get_config(arch)
+    sh = INPUT_SHAPES[shape]
+    mf = model_flops(cfg, sh) / rec["chips"]
+    dom = max(t["compute_s"], t["memory_s"], t["collective_s"])
+    return {**t, "dominant_s": dom, "rl": (mf / PEAK_FLOPS_BF16) / dom,
+            "flops": rec["hlo_cost"]["flops"],
+            "bytes": rec["hlo_cost"]["bytes"]}
+
+
+def sec_perf(log_md: str) -> str:
+    lines = ["## §Perf — hillclimbing the three selected pairs\n", log_md,
+             "\n### Measured A/B (dry-run, single-pod, per device)\n",
+             "| pair | variant | compute_s | memory_s | collective_s | "
+             "dominant | rl_frac | delta dominant |",
+             "|---|---|---|---|---|---|---|---|"]
+    for arch, shape, suffix, why in HILLCLIMBS:
+        base = _pair_summary(arch, shape, None)
+        opt = _pair_summary(arch, shape, suffix)
+        for name, r in (("baseline (paper-faithful)", base),
+                        (suffix, opt)):
+            if r is None:
+                lines.append(f"| {arch}/{shape} | {name} | MISSING | | | | | |")
+                continue
+            delta = ""
+            if r is opt and base:
+                delta = f"{(1 - r['dominant_s'] / base['dominant_s']) * 100:+.1f}%"
+                delta = f"-{(1 - r['dominant_s'] / base['dominant_s']) * 100:.1f}%" \
+                    if r['dominant_s'] < base['dominant_s'] else \
+                    f"+{(r['dominant_s'] / base['dominant_s'] - 1) * 100:.1f}%"
+            lines.append(
+                f"| {arch}/{shape} | {name} | {r['compute_s']:.4f} | "
+                f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+                f"{r['dominant_s']:.4f} | {r['rl']:.4f} | {delta} |")
+    return "\n".join(lines) + "\n"
+
+
+def sec_paper(bench_csv: Optional[str]) -> str:
+    lines = ["## §Paper-validation\n"]
+    if bench_csv and os.path.exists(bench_csv):
+        lines.append("Benchmark harness output (`python -m benchmarks.run`):\n")
+        lines.append("```")
+        with open(bench_csv) as f:
+            lines.append(f.read().strip())
+        lines.append("```")
+    return "\n".join(lines) + "\n"
+
+
+def main(perf_log_path="benchmarks/perf_log.md",
+         bench_csv="bench_output.txt",
+         validation_md="benchmarks/validation.md"):
+    log_md = ""
+    if os.path.exists(os.path.join(ROOT, perf_log_path)):
+        log_md = open(os.path.join(ROOT, perf_log_path)).read()
+    parts = [
+        "# EXPERIMENTS — DuoServe-MoE reproduction\n",
+        "Generated by `benchmarks/make_experiments.py` from "
+        "results/dryrun/*.json and the benchmark caches. "
+        "See DESIGN.md for methodology.\n",
+        sec_dryrun(),
+        sec_roofline(),
+        sec_perf(log_md),
+    ]
+    vpath = os.path.join(ROOT, validation_md)
+    if os.path.exists(vpath):
+        parts.append(open(vpath).read())
+    parts.append(sec_paper(os.path.join(ROOT, bench_csv)))
+    with open(OUT, "w") as f:
+        f.write("\n".join(parts))
+    print("wrote", OUT)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Quickstart: serve one request through DuoServe-MoE end to end.
+
+Builds a reduced Mixtral-class MoE, runs the offline preprocess (trace ->
+popularity/affinity -> ExpertMLP), then serves a prompt with the dual-phase
+scheduler and prints the QoS picture vs the ODF baseline.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.configs.base import get_config, reduced
+from repro.core.predictor import train_predictor
+from repro.core.simulator import HW, ModelCosts, simulate_request
+from repro.core.scheduler import make_scheduler
+from repro.core.state import StateConstructor
+from repro.data.pipeline import PromptWorkload, squad_like
+from repro.models.model import build
+from repro.serving.engine import MoEServingEngine, collect_traces
+
+
+def main():
+    cfg = reduced(get_config("mixtral_8x7b"))
+    print(f"model: {cfg.name}  L={cfg.n_layers} E={cfg.n_experts} "
+          f"top-k={cfg.top_k}")
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+
+    wl = PromptWorkload(squad_like(cfg.vocab), seed=1)
+    prompts = [p[:32] for p, _ in wl.prompts(10)]
+
+    print("\n[offline preprocess] tracing expert activations ...")
+    tracer, _ = collect_traces(cfg, params, prompts[:8], max_new=6)
+    stats = tracer.stats()
+    print(f"  {len(tracer.paths)} activation paths; popularity "
+          f"{stats.popularity.shape}, affinity {stats.affinity.shape}")
+
+    print("[offline preprocess] training ExpertMLP ...")
+    sc = StateConstructor(stats)
+    X, Y = sc.build_dataset(tracer.as_array())
+    predictor, hist = train_predictor(jax.random.PRNGKey(1), X, Y, cfg.top_k,
+                                      width_scale=0.1, epochs=5, batch=32)
+    print(f"  val top-k acc {hist['val_topk'][-1]:.2f}  "
+          f"at-least-half {hist['val_half'][-1]:.2f}")
+
+    print("\n[online] serving with DuoServe dual-phase scheduling ...")
+    eng = MoEServingEngine(cfg, params, policy="duo", stats=stats,
+                           predictor=predictor)
+    r = eng.serve(prompts[9], max_new=8)
+    print(f"  generated tokens: {r.tokens.tolist()}")
+    print(f"  decode cache hits={r.hits} misses={r.misses}")
+
+    print("\n[replay] two-stream simulator @ Mixtral-8x7B scale (AWQ 4bit):")
+    full = get_config("mixtral_8x7b")
+    costs = ModelCosts(full, quant_bytes=0.5)
+    for pol in ("odf", "duo"):
+        fstats = stats.tiled(full.n_layers)
+        sched = make_scheduler(pol, full.n_layers, full.n_experts, full.top_k,
+                               int(costs.expert_bytes), stats=fstats,
+                               predictor=predictor,
+                               state_constructor=StateConstructor(fstats))
+        # project the reduced trace onto the full depth by tiling layers
+        reps = full.n_layers // cfg.n_layers
+        pa = (r.prefill_active * reps)[: full.n_layers]
+        dt = np.tile(r.decode_trace, (1, reps, 1))[:, : full.n_layers]
+        s = simulate_request(sched, costs, HW(), pa, dt, seq_len=256)
+        print(f"  {pol:4s} ttft={s.ttft:.3f}s e2e={s.e2e:.3f}s "
+              f"peak={s.peak_bytes / 1e9:.2f}GB decode_hit={s.hit_rate:.2f}")
+
+
+if __name__ == "__main__":
+    main()

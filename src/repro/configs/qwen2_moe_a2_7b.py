@@ -1,0 +1,15 @@
+"""Qwen2-MoE-A2.7B [moe] — 24L d_model=2048 16H (MHA kv=16) d_ff(expert)=1408
+vocab=151936, 60 routed experts top-4 + 4 shared experts.
+
+Primary DuoServe-MoE target arch (large pool, top-4). [hf:Qwen/Qwen1.5-MoE-A2.7B]
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-moe-a2.7b", family="moe",
+    n_layers=24, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=1408, vocab=151936, head_dim=128,
+    n_experts=60, n_shared_experts=4, top_k=4, d_expert=1408,
+    rope_theta=1_000_000.0,
+    source="hf:Qwen/Qwen1.5-MoE-A2.7B",
+)

@@ -1,0 +1,171 @@
+"""Expert weight stores and device-side expert caches.
+
+HostExpertStore — the "CPU expert cache" of the paper: all routed-expert
+weights live in host RAM (numpy). DeviceExpertCache — the "GPU expert cache":
+a small set of device-resident slots per layer (DuoServe sizes it to top-k),
+filled by `prefetch` (jax.device_put → host->HBM DMA; asynchronously
+dispatched, so issuing a prefetch then dispatching compute overlaps them the
+way the paper's two CUDA streams do).
+
+Both the serving engine and the discrete-event simulator share the same
+residency/eviction logic via CacheState, so simulated peak memory and hit
+rates reflect exactly what the engine would do.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+import jax
+import numpy as np
+
+ExpertKey = Tuple[int, int]  # (layer, expert)
+
+
+class HostExpertStore:
+    """Host-RAM store of per-expert FFN weights (w1, w3, w2)."""
+
+    def __init__(self, weights: Dict[ExpertKey, Tuple[np.ndarray, ...]]):
+        self.weights = weights
+        any_w = next(iter(weights.values()))
+        self.bytes_per_expert = sum(a.nbytes for a in any_w)
+
+    @staticmethod
+    def from_params(layer_moe_params, n_layers: int, n_experts: int
+                    ) -> "HostExpertStore":
+        """layer_moe_params: stacked MoE params {'w1': [L,E,d,de], ...}."""
+        w = {}
+        for l in range(n_layers):
+            for e in range(n_experts):
+                w[(l, e)] = (np.asarray(layer_moe_params["w1"][l, e]),
+                             np.asarray(layer_moe_params["w3"][l, e]),
+                             np.asarray(layer_moe_params["w2"][l, e]))
+        return HostExpertStore(w)
+
+    def get(self, key: ExpertKey):
+        return self.weights[key]
+
+
+@dataclasses.dataclass
+class CacheEvent:
+    kind: str            # 'fetch' | 'hit' | 'evict'
+    key: ExpertKey
+    t_issue: float       # host wall-clock when issued (engine) / sim time
+    bytes: int = 0
+
+
+class CacheState:
+    """Residency bookkeeping shared by engine + simulator.
+
+    capacity: max resident experts (global across layers). Eviction is LRU
+    among non-pinned entries; `pin`/`unpin` protect experts between prefetch
+    and use (the paper's sync-point semantics).
+    """
+
+    def __init__(self, capacity: int, bytes_per_expert: int):
+        self.capacity = capacity
+        self.bytes_per_expert = bytes_per_expert
+        self.resident: "collections.OrderedDict[ExpertKey, bool]" = \
+            collections.OrderedDict()  # key -> pinned
+        self.events: List[CacheEvent] = []
+        self.peak_resident = 0
+        self.hits = 0
+        self.misses = 0
+
+    def contains(self, key: ExpertKey) -> bool:
+        return key in self.resident
+
+    def touch(self, key: ExpertKey) -> None:
+        self.resident.move_to_end(key)
+
+    def lookup(self, key: ExpertKey, t: float = 0.0) -> bool:
+        if key in self.resident:
+            self.hits += 1
+            self.touch(key)
+            self.events.append(CacheEvent("hit", key, t))
+            return True
+        self.misses += 1
+        return False
+
+    def admit(self, key: ExpertKey, t: float = 0.0, pinned: bool = True
+              ) -> List[ExpertKey]:
+        """Admit key, evicting LRU unpinned entries if needed.
+        Returns evicted keys."""
+        evicted = []
+        if key in self.resident:
+            self.resident[key] = pinned or self.resident[key]
+            self.touch(key)
+            return evicted
+        while len(self.resident) >= self.capacity:
+            victim = None
+            for k, pin in self.resident.items():
+                if not pin:
+                    victim = k
+                    break
+            if victim is None:  # everything pinned: grow (engine never should)
+                break
+            del self.resident[victim]
+            self.events.append(CacheEvent("evict", victim, t))
+            evicted.append(victim)
+        self.resident[key] = pinned
+        self.events.append(
+            CacheEvent("fetch", key, t, self.bytes_per_expert))
+        self.peak_resident = max(self.peak_resident, len(self.resident))
+        return evicted
+
+    def unpin(self, key: ExpertKey) -> None:
+        if key in self.resident:
+            self.resident[key] = False
+
+    def unpin_all(self) -> None:
+        for k in self.resident:
+            self.resident[k] = False
+
+    @property
+    def peak_bytes(self) -> int:
+        return self.peak_resident * self.bytes_per_expert
+
+    @property
+    def hit_rate(self) -> float:
+        tot = self.hits + self.misses
+        return self.hits / tot if tot else 0.0
+
+
+class DeviceExpertCache:
+    """Real device-side cache backed by CacheState bookkeeping.
+
+    prefetch() issues jax.device_put (async dispatch — returns immediately;
+    the transfer overlaps subsequently dispatched compute, the TPU analogue
+    of the paper's communication stream).
+    """
+
+    def __init__(self, store: HostExpertStore, capacity: int):
+        self.store = store
+        self.state = CacheState(capacity, store.bytes_per_expert)
+        self._dev: Dict[ExpertKey, Tuple[jax.Array, ...]] = {}
+        self.transfer_log: List[Tuple[ExpertKey, float]] = []
+
+    def prefetch(self, key: ExpertKey, pinned: bool = True) -> bool:
+        """Returns True on hit (already resident)."""
+        t = time.perf_counter()
+        if self.state.lookup(key, t):
+            return True
+        for victim in self.state.admit(key, t, pinned):
+            self._dev.pop(victim, None)
+        host = self.store.get(key)
+        self._dev[key] = tuple(jax.device_put(a) for a in host)
+        self.transfer_log.append((key, t))
+        return False
+
+    def get(self, key: ExpertKey) -> Tuple[jax.Array, ...]:
+        if key not in self._dev:  # miss on use = correction fetch (sync point)
+            self.prefetch(key)
+        self.state.touch(key)
+        return self._dev[key]
+
+    def wait(self, key: ExpertKey) -> None:
+        """Sync point: block until the expert's weights are on device."""
+        for a in self._dev[key]:
+            a.block_until_ready()

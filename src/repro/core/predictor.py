@@ -1,0 +1,176 @@
+"""ExpertMLP (paper §IV-B): deep MLP expert-activation predictor, pure JAX.
+
+Architecture (faithful): seven fully-connected hidden layers with widths
+progressively reduced from 2048 to 64, each followed by BatchNorm + ReLU +
+Dropout(0.1), then a final linear output over the target layer's experts.
+Trained with multi-label Binary Cross-Entropy (Eq. 6) via sigmoid outputs.
+
+One predictor is shared across all layers of a model (the layer index is part
+of the state vector — "layer-level prediction"). `width_scale` shrinks the
+stack proportionally for reduced smoke models.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.training.optimizer import AdamW
+
+HIDDEN = (2048, 1536, 1024, 512, 256, 128, 64)
+DROPOUT = 0.1
+
+
+def hidden_dims(width_scale: float = 1.0) -> Tuple[int, ...]:
+    return tuple(max(8, int(h * width_scale)) for h in HIDDEN)
+
+
+def init_predictor(key, in_dim: int, n_experts: int,
+                   width_scale: float = 1.0):
+    dims = (in_dim,) + hidden_dims(width_scale) + (n_experts,)
+    keys = jax.random.split(key, len(dims) - 1)
+    params, bn = [], []
+    for i, k in enumerate(keys):
+        fan_in = dims[i]
+        w = jax.random.normal(k, (dims[i], dims[i + 1])) * (2.0 / fan_in) ** 0.5
+        params.append({"w": w.astype(jnp.float32),
+                       "b": jnp.zeros(dims[i + 1], jnp.float32)})
+        if i < len(keys) - 1:  # batchnorm on hidden layers only
+            params[-1]["bn_scale"] = jnp.ones(dims[i + 1], jnp.float32)
+            params[-1]["bn_bias"] = jnp.zeros(dims[i + 1], jnp.float32)
+            bn.append({"mean": jnp.zeros(dims[i + 1], jnp.float32),
+                       "var": jnp.ones(dims[i + 1], jnp.float32)})
+    return params, bn
+
+
+def forward(params: List[Dict], bn_state: List[Dict], x: jax.Array, *,
+            train: bool, rng=None, momentum: float = 0.9):
+    """Returns (logits [B, E], new_bn_state)."""
+    new_bn = []
+    h = x
+    n_hidden = len(params) - 1
+    for i, lp in enumerate(params):
+        h = h @ lp["w"] + lp["b"]
+        if i < n_hidden:
+            st = bn_state[i]
+            if train:
+                mu = h.mean(0)
+                var = h.var(0) + 1e-5
+                new_bn.append({
+                    "mean": momentum * st["mean"] + (1 - momentum) * mu,
+                    "var": momentum * st["var"] + (1 - momentum) * var,
+                })
+            else:
+                mu, var = st["mean"], st["var"] + 1e-5
+                new_bn.append(st)
+            h = (h - mu) * jax.lax.rsqrt(var)
+            h = h * lp["bn_scale"] + lp["bn_bias"]
+            h = jax.nn.relu(h)
+            if train and rng is not None:
+                rng, sub = jax.random.split(rng)
+                keep = jax.random.bernoulli(sub, 1 - DROPOUT, h.shape)
+                h = jnp.where(keep, h / (1 - DROPOUT), 0.0)
+    return h, new_bn
+
+
+def bce_loss(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Eq. 6: multi-label binary cross-entropy over sigmoid outputs."""
+    z = logits
+    # stable BCE-with-logits: max(z,0) - z*y + log(1+exp(-|z|))
+    return jnp.mean(jnp.maximum(z, 0) - z * targets
+                    + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+
+@dataclasses.dataclass
+class TrainedPredictor:
+    params: List[Dict]
+    bn_state: List[Dict]
+    top_k: int
+
+    def predict_logits(self, x: np.ndarray) -> np.ndarray:
+        lg, _ = forward(self.params, self.bn_state, jnp.asarray(x), train=False)
+        return np.asarray(lg)
+
+    def predict_topk(self, x: np.ndarray, k: int | None = None) -> np.ndarray:
+        lg = self.predict_logits(x)
+        k = k or self.top_k
+        return np.argsort(-lg, axis=-1)[..., :k]
+
+
+def train_predictor(key, X: np.ndarray, Y: np.ndarray, top_k: int, *,
+                    width_scale: float = 1.0, epochs: int = 10,
+                    batch: int = 256, lr: float = 1e-3,
+                    val_frac: float = 0.1, verbose: bool = False):
+    """Offline preprocess training (paper §IV-B). Returns
+    (TrainedPredictor, history dict)."""
+    n = X.shape[0]
+    n_val = max(1, int(n * val_frac))
+    rng = np.random.default_rng(0)
+    perm = rng.permutation(n)
+    Xtr, Ytr = X[perm[n_val:]], Y[perm[n_val:]]
+    Xva, Yva = X[perm[:n_val]], Y[perm[:n_val]]
+
+    kinit, key = jax.random.split(jax.random.PRNGKey(0) if key is None else key)
+    params, bn = init_predictor(kinit, X.shape[1], Y.shape[1], width_scale)
+    opt = AdamW(lr=lr, weight_decay=1e-4, grad_clip=1.0)
+    opt_state = opt.init(params)
+
+    @jax.jit
+    def step(params, bn, opt_state, xb, yb, rng):
+        def loss_fn(p):
+            lg, new_bn = forward(p, bn, xb, train=True, rng=rng)
+            return bce_loss(lg, yb), new_bn
+        (loss, new_bn), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt_state, _ = opt.update(grads, opt_state, params)
+        return params, new_bn, opt_state, loss
+
+    @jax.jit
+    def val_loss(params, bn, xb, yb):
+        lg, _ = forward(params, bn, xb, train=False)
+        return bce_loss(lg, yb), lg
+
+    history = {"train_loss": [], "val_loss": [], "val_topk": [],
+               "val_half": []}
+    steps_per_epoch = max(1, len(Xtr) // batch)
+    for ep in range(epochs):
+        perm = rng.permutation(len(Xtr))
+        losses = []
+        for i in range(steps_per_epoch):
+            idx = perm[i * batch:(i + 1) * batch]
+            key, sub = jax.random.split(key)
+            params, bn, opt_state, loss = step(
+                params, bn, opt_state, jnp.asarray(Xtr[idx]),
+                jnp.asarray(Ytr[idx]), sub)
+            losses.append(float(loss))
+        vl, vlg = val_loss(params, bn, jnp.asarray(Xva), jnp.asarray(Yva))
+        tk, half = accuracy_metrics(np.asarray(vlg), Yva, top_k)
+        history["train_loss"].append(float(np.mean(losses)))
+        history["val_loss"].append(float(vl))
+        history["val_topk"].append(tk)
+        history["val_half"].append(half)
+        if verbose:
+            print(f"epoch {ep}: train {np.mean(losses):.4f} val {float(vl):.4f}"
+                  f" topk {tk:.3f} half {half:.3f}")
+    return TrainedPredictor(params, bn, top_k), history
+
+
+def accuracy_metrics(logits: np.ndarray, targets: np.ndarray,
+                     top_k: int) -> Tuple[float, float]:
+    """Paper Table III metrics.
+
+    Top-k: all k routed experts correctly predicted (set equality of the
+    predictor's top-k vs ground truth). At-least-half: >= ceil(k/2) of the
+    routed experts are in the predictor's top-k.
+    """
+    pred = np.argsort(-logits, axis=-1)[:, :top_k]
+    hits = np.zeros(len(logits))
+    for i in range(len(logits)):
+        true = np.where(targets[i] > 0)[0]
+        hits[i] = len(np.intersect1d(pred[i], true))
+    k_true = targets.sum(1)
+    exact = float(np.mean(hits >= k_true))
+    half = float(np.mean(hits >= np.ceil(k_true / 2)))
+    return exact, half

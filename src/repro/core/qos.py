@@ -1,0 +1,45 @@
+"""QoS metrics (paper §VI-A Metrics): TTFT, E2E, tail latency, throughput."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class QoSSummary:
+    mean_ttft: float
+    mean_e2e: float
+    p50_e2e: float
+    p95_e2e: float
+    p99_e2e: float
+    tokens_per_s: float
+    peak_bytes: float
+    hit_rate: float
+    n_requests: int
+
+    def row(self) -> Dict[str, float]:
+        return dataclasses.asdict(self)
+
+
+def summarize(ttfts: Sequence[float], e2es: Sequence[float],
+              total_tokens: int, peak_bytes: float = 0.0,
+              hit_rate: float = 0.0) -> QoSSummary:
+    e = np.asarray(e2es, float)
+    return QoSSummary(
+        mean_ttft=float(np.mean(ttfts)),
+        mean_e2e=float(e.mean()),
+        p50_e2e=float(np.percentile(e, 50)),
+        p95_e2e=float(np.percentile(e, 95)),
+        p99_e2e=float(np.percentile(e, 99)),
+        tokens_per_s=float(total_tokens / max(e.sum(), 1e-12)),
+        peak_bytes=float(peak_bytes),
+        hit_rate=float(hit_rate),
+        n_requests=len(e2es),
+    )
+
+
+def slo_attainment(e2es: Sequence[float], slo: float) -> float:
+    e = np.asarray(e2es, float)
+    return float((e <= slo).mean())

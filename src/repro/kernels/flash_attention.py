@@ -1,0 +1,113 @@
+"""Blockwise online-softmax attention (prefill) — Pallas TPU kernel.
+
+Causal + sliding-window + GQA. Grid (B, H, nq, nk) with the kv axis
+innermost; running max/denominator live in VMEM scratch; the output tile is
+written once on the last kv step. Fully-masked kv blocks (beyond the causal
+frontier or outside the window) skip their MXU work via pl.when — unlike the
+pure-jnp reference path, which computes-then-masks (that delta is the §Perf
+compute-term win this kernel represents).
+
+q: [B, H, S, D]; k/v: [B, Hkv, S, D]; window <= 0 = unbounded.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, block_q: int, block_k: int, seq_len: int,
+            window: int, causal: bool):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qpos = i * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
+    kpos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+    valid = kpos < seq_len
+    if causal:
+        valid &= kpos <= qpos
+    if window > 0:
+        valid &= kpos > qpos - window
+
+    # block liveness: any valid element? (causal frontier / window band)
+    live = jnp.bool_(True)
+    if causal:
+        live &= (j * block_k) <= ((i + 1) * block_q - 1)
+    if window > 0:
+        live &= ((j + 1) * block_k - 1) > (i * block_q - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0]                    # [bq, D]
+        k = k_ref[0, 0]                    # [bk, D]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_cur = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_cur)
+        corr = jnp.exp(m_prev - m_cur)
+        l_ref[...] = l_ref[...] * corr + p.sum(-1, keepdims=True)
+        m_ref[...] = m_cur
+        acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+            p.astype(v_ref.dtype), v_ref[0, 0],
+            preferred_element_type=jnp.float32)
+
+    @pl.when(j == nk - 1)
+    def _write():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-20)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = -1,
+                    block_q: int = 512, block_k: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    """q: [B,H,S,D]; k,v: [B,Hkv,S,D] -> [B,H,S,D]."""
+    B, H, S, D = q.shape
+    Hkv = k.shape[1]
+    G = H // Hkv
+    bq, bk = min(block_q, S), min(block_k, S)
+    nq, nk = -(-S // bq), -(-S // bk)
+    pad_q, pad_k = nq * bq - S, nk * bk - S
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+
+    kern = functools.partial(
+        _kernel, scale=D ** -0.5, block_q=bq, block_k=bk, seq_len=S,
+        window=window, causal=causal)
+    out = pl.pallas_call(
+        kern,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, nq * bq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max
+            pltpu.VMEM((bq, 1), jnp.float32),   # running denom
+            pltpu.VMEM((bq, D), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :S]

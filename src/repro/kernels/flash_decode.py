@@ -1,0 +1,99 @@
+"""Single-token decode attention over a (ring-buffer) KV cache — Pallas TPU.
+
+Completes the kernel set: prefill = flash_attention, MoE = expert_ffn,
+SSM = ssd_scan, decode = this. Grid (B, Hkv, n_chunks): the kv cache streams
+through VMEM in chunks while the running online-softmax state for the G
+grouped query heads sits in scratch; Pallas double-buffers the next chunk's
+cache tiles during the current chunk's dot products (decode is pure
+HBM-bandwidth — the pipeline keeps the MXU fed at the cache-read rate).
+
+q: [B, H, D] (one token); k,v: [B, Hkv, S, D]; slot_pos: [S] absolute
+position per cache slot (-1 = empty); pos: scalar int32 position of the new
+token (already written into the cache). window <= 0 = unbounded.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(pos_ref, q_ref, k_ref, v_ref, sp_ref, o_ref, m_ref, l_ref,
+            acc_ref, *, scale: float, window: int):
+    j = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                       # [G, D]
+    k = k_ref[0, 0]                       # [bk, D]
+    sp = sp_ref[0]                        # [bk]
+    pos = pos_ref[0]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [G, bk]
+    valid = (sp >= 0) & (sp <= pos)
+    if window > 0:
+        valid &= sp > pos - window
+    s = jnp.where(valid[None, :], s, NEG_INF)
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+    p = jnp.exp(s - m_cur)
+    corr = jnp.exp(m_prev - m_cur)
+    l_ref[...] = l_ref[...] * corr + p.sum(-1, keepdims=True)
+    m_ref[...] = m_cur
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p.astype(v_ref.dtype), v_ref[0, 0],
+        preferred_element_type=jnp.float32)
+
+    @pl.when(j == nk - 1)
+    def _write():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-20)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_k", "interpret"))
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                 slot_pos: jax.Array, pos: jax.Array, *, window: int = -1,
+                 block_k: int = 512, interpret: bool = False) -> jax.Array:
+    """q: [B,H,D]; k,v: [B,Hkv,S,D]; slot_pos: [S]; pos: scalar -> [B,H,D]."""
+    B, H, D = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    G = H // Hkv
+    bk = min(block_k, S)
+    nk = -(-S // bk)
+    pad = nk * bk - S
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        slot_pos = jnp.pad(slot_pos, (0, pad), constant_values=-1)
+    qg = q.reshape(B, Hkv, G, D)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=D ** -0.5, window=window),
+        grid=(B, Hkv, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, G, D), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, bk), lambda b, h, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos_arr, qg, k, v, slot_pos[None])
+    return out.reshape(B, H, D)

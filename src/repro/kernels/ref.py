@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (shape/dtype-sweep tests assert
+allclose against these)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def expert_ffn_ref(x, w1, w3, w2):
+    """x: [E,C,d]; w1/w3: [E,d,f]; w2: [E,f,d] -> [E,C,d] (x.dtype)."""
+    h1 = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                    w1.astype(jnp.float32))
+    h3 = jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                    w3.astype(jnp.float32))
+    h = jax.nn.silu(h1) * h3
+    y = jnp.einsum("ecf,efd->ecd", h.astype(x.dtype).astype(jnp.float32),
+                   w2.astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=-1):
+    """q: [B,H,S,D]; k,v: [B,Hkv,S,D] -> [B,H,S,D]."""
+    B, H, S, D = q.shape
+    Hkv = k.shape[1]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, S, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kf) * (D ** -0.5)
+    ii = jnp.arange(S)[:, None]
+    jj = jnp.arange(S)[None, :]
+    ok = jnp.ones((S, S), bool)
+    if causal:
+        ok &= jj <= ii
+    if window > 0:
+        ok &= jj > ii - window
+    s = jnp.where(ok[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, S, D).astype(q.dtype)
+
+
+def ssd_scan_ref(x, b, c, da, dt):
+    """Sequential recurrence oracle. x: [BH,S,P]; b,c: [BH,S,N];
+    da,dt: [BH,S] -> y [BH,S,P] f32."""
+    BH, S, P = x.shape
+    N = b.shape[2]
+    h = jnp.zeros((BH, N, P), jnp.float32)
+    ys = []
+    xf = x.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+    for t in range(S):
+        h = (jnp.exp(da[:, t])[:, None, None] * h
+             + dt[:, t, None, None]
+             * jnp.einsum("zn,zp->znp", bf[:, t], xf[:, t]))
+        ys.append(jnp.einsum("zn,znp->zp", cf[:, t], h))
+    return jnp.stack(ys, axis=1), h

@@ -1,0 +1,96 @@
+"""Mamba2 SSD chunked scan — Pallas TPU kernel.
+
+Grid (B*H, n_chunks); the chunk axis is innermost and SEQUENTIAL: the
+inter-chunk SSM state [N, P] persists in VMEM scratch across grid steps
+(zeroed at chunk 0), while Pallas streams the next chunk's x/B/C/dt tiles
+from HBM during the current chunk's MXU work — the recurrent analogue of the
+expert-streaming pipeline.
+
+Per chunk (decay-masked attention form, arXiv:2405.21060):
+  cs       = cumsum(dt * A)                      [cl]
+  y_intra  = ((C B^T) o L) (dt o x),  L_ij = exp(cs_i - cs_j) for i >= j
+  y_inter  = exp(cs) o (C h_in)
+  h_out    = exp(cs_last) h_in + sum_j exp(cs_last - cs_j) dt_j B_j x_j
+
+Inputs (heads flattened into batch):
+  x [BH, S, P], b [BH, S, N], c [BH, S, N], da [BH, S] (= dt*A), dt [BH, S]
+Output y [BH, S, P] (f32).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, b_ref, c_ref, da_ref, dt_ref, y_ref, h_ref, *, cl: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0].astype(jnp.float32)      # [cl, P]
+    b = b_ref[0].astype(jnp.float32)      # [cl, N]
+    c = c_ref[0].astype(jnp.float32)      # [cl, N]
+    da = da_ref[0].astype(jnp.float32)    # [cl]
+    dt = dt_ref[0].astype(jnp.float32)    # [cl]
+    cs = jnp.cumsum(da)                   # [cl]
+
+    # intra-chunk
+    g = jnp.dot(c, b.T, preferred_element_type=jnp.float32)      # [cl, cl]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (cl, cl), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (cl, cl), 1)
+    ldec = jnp.where(ii >= jj, jnp.exp(cs[:, None] - cs[None, :]), 0.0)
+    m = g * ldec * dt[None, :]
+    y = jnp.dot(m, x, preferred_element_type=jnp.float32)        # [cl, P]
+
+    # inter-chunk: contribution of incoming state
+    h_in = h_ref[...]                                            # [N, P]
+    y += jnp.exp(cs)[:, None] * jnp.dot(c, h_in,
+                                        preferred_element_type=jnp.float32)
+
+    # state update
+    dec_end = jnp.exp(cs[-1] - cs) * dt                          # [cl]
+    h_ref[...] = (jnp.exp(cs[-1]) * h_in
+                  + jnp.dot((b * dec_end[:, None]).T, x,
+                            preferred_element_type=jnp.float32))
+    y_ref[0] = y
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x: jax.Array, b: jax.Array, c: jax.Array, da: jax.Array,
+             dt: jax.Array, *, chunk: int = 256,
+             interpret: bool = False) -> jax.Array:
+    """x: [BH,S,P]; b,c: [BH,S,N]; da,dt: [BH,S] -> y [BH,S,P] f32."""
+    BH, S, P = x.shape
+    N = b.shape[2]
+    cl = min(chunk, S)
+    nc = -(-S // cl)
+    pad = nc * cl - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        da = jnp.pad(da, ((0, 0), (0, pad)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad)))
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, cl=cl),
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1, cl, P), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, cl, N), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, cl, N), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, cl), lambda i, j: (i, j)),
+            pl.BlockSpec((1, cl), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, cl, P), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, nc * cl, P), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, b, c, da, dt)
+    return out[:, :S]

@@ -1,0 +1,282 @@
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh).
+
+This is the proof that the distribution config is coherent without hardware:
+``jax.jit(step, in_shardings=...).lower(**abstract).compile()`` must succeed
+on the 16x16 single-pod mesh and the 2x16x16 multi-pod mesh for every pair.
+Memory/cost analysis and the collective schedule are dumped to
+``results/dryrun/*.json`` for §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only|--single-pod-only]
+"""
+# The dry-run (and ONLY the dry-run) needs 512 placeholder devices; jax locks
+# the device count at first backend init, so this precedes EVERY other import.
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import numpy as np   # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs.base import (ARCH_IDS, INPUT_SHAPES, get_config,  # noqa: E402
+                                pairs)
+from repro.launch import partition  # noqa: E402
+from repro.launch.input_specs import input_specs, decode_abs, train_batch_abs  # noqa: E402
+from repro.launch.mesh import make_production_mesh, mesh_info, n_chips  # noqa: E402
+from repro.models.model import build  # noqa: E402
+from repro.training.optimizer import AdamW, AdamWState  # noqa: E402
+from repro.training.train_loop import make_train_step  # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+_COLL_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?(?:\.\d+)?\s*\(")
+_SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|u32|s8|u8|pred|s64|f64)\[([\d,]*)\]")
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "s64": 8, "f64": 8}
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def parse_collectives(hlo_text: str):
+    """Sum result-operand bytes of every collective op in optimized HLO."""
+    out = {}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = _COLL_RE.search(line)
+        if not m or "=" not in line:
+            continue
+        op = m.group(1)
+        lhs = line.split("=")[1]
+        sm = _SHAPE_RE.search(lhs)
+        if not sm:
+            continue
+        dt, dims = sm.group(1), sm.group(2)
+        size = _DTYPE_BYTES[dt]
+        for d in dims.split(","):
+            if d:
+                size *= int(d)
+        rec = out.setdefault(op, {"count": 0, "bytes": 0})
+        rec["count"] += 1
+        rec["bytes"] += size
+    return out
+
+
+def lower_pair(arch: str, shape_name: str, multi_pod: bool,
+               skip_compile: bool = False,
+               microbatches: int = 0) -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    minfo = mesh_info(mesh)
+    n_model = mesh.shape["model"]
+    n_dp = n_chips(mesh) // n_model
+    dp = minfo["dp"] if len(minfo["dp"]) > 1 else minfo["dp"][0]
+
+    bundle = build(cfg, mesh_info=minfo)
+    params_abs = jax.eval_shape(lambda: bundle.init(jax.random.PRNGKey(0)))
+    pspecs = partition.param_specs(cfg, params_abs, n_model=n_model)
+
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "chips": n_chips(mesh), "kind": shape.kind,
+           "microbatches": microbatches if shape.kind == "train" else None}
+    t0 = time.time()
+
+    if shape.kind == "train":
+        if not microbatches:
+            # bigger models need smaller activation working sets; the
+            # per-layer residual carries scale with the microbatch size
+            microbatches = 4 if cfg.d_model < 4096 else \
+                (8 if cfg.d_model < 6144 else 16)
+        # each microbatch must stay divisible by the data-parallel world
+        microbatches = min(microbatches, max(shape.global_batch // n_dp, 1))
+        rec["microbatches"] = microbatches
+        opt = AdamW()
+        opt_abs = jax.eval_shape(opt.init, params_abs)
+        # FSDP/ZeRO-3 via GSPMD: params AND moments stored sharded over the
+        # data axes on top of tensor parallelism; the per-layer weight
+        # all-gathers appear automatically in the lowered module. Enabled
+        # when params+optimizer at tensor-parallel-only sharding would blow
+        # the 16 GB/chip budget (100B-1T configs); small models keep plain
+        # DP+TP (FSDP's per-layer gathers only cost them). See §Perf.
+        param_bytes = sum(
+            int(np.prod(l.shape)) * l.dtype.itemsize
+            for l in jax.tree.leaves(params_abs))
+        state_gb_dev = param_bytes * (1 + 8 / 2) / n_model / 1e9
+        zspecs = partition.zero_specs(params_abs, pspecs, dp=dp, n_dp=n_dp)
+        rec["fsdp"] = bool(state_gb_dev > 8.0)
+        if rec["fsdp"]:
+            pspecs = zspecs
+        ospecs = AdamWState(P(), zspecs, zspecs)
+        batch_abs = train_batch_abs(cfg, shape)
+        bspecs = partition.batch_specs(batch_abs, dp=dp, n_dp=n_dp)
+        mb = microbatches
+
+        def mb_constraint(tree):
+            # applied to one already-sliced microbatch: leaf dim 0 is batch
+            def pin(leaf):
+                spec = [None] * leaf.ndim
+                if leaf.shape[0] % n_dp == 0:
+                    spec[0] = dp
+                return jax.lax.with_sharding_constraint(
+                    leaf, NamedSharding(mesh, P(*spec)))
+            return jax.tree.map(pin, tree)
+
+        def acc_constraint(tree):
+            return jax.tree.map(
+                lambda leaf, sp: jax.lax.with_sharding_constraint(
+                    leaf, NamedSharding(mesh, sp)),
+                tree, zspecs)
+
+        step_fn = make_train_step(bundle, opt, microbatches=mb,
+                                  mb_constraint=mb_constraint,
+                                  acc_constraint=acc_constraint)
+        jfn = jax.jit(step_fn, in_shardings=(
+            _ns(mesh, pspecs), _ns(mesh, ospecs), _ns(mesh, bspecs)))
+        lowered = jfn.lower(params_abs, opt_abs, batch_abs)
+    elif shape.kind == "prefill":
+        batch_abs = train_batch_abs(cfg, shape)
+        bspecs = partition.batch_specs(batch_abs, dp=dp, n_dp=n_dp)
+        jfn = jax.jit(bundle.prefill,
+                      in_shardings=(_ns(mesh, pspecs), _ns(mesh, bspecs)))
+        lowered = jfn.lower(params_abs, batch_abs)
+    else:  # decode
+        step_abs, cache_abs = decode_abs(cfg, shape, bundle)
+        sspecs = partition.batch_specs(step_abs, dp=dp, n_dp=n_dp)
+        cspecs = partition.cache_specs(cfg, cache_abs, dp=dp,
+                                       n_model=n_model, n_dp=n_dp)
+        jfn = jax.jit(bundle.decode_step, in_shardings=(
+            _ns(mesh, pspecs), _ns(mesh, sspecs), _ns(mesh, cspecs)))
+        lowered = jfn.lower(params_abs, step_abs, cache_abs)
+
+    rec["lower_s"] = round(time.time() - t0, 2)
+    if skip_compile:
+        return rec
+
+    t1 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t1, 2)
+
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": getattr(ma, "argument_size_in_bytes", None),
+            "output_bytes": getattr(ma, "output_size_in_bytes", None),
+            "temp_bytes": getattr(ma, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(ma, "generated_code_size_in_bytes",
+                                            None),
+        }
+    except Exception as e:  # pragma: no cover
+        rec["memory"] = {"error": str(e)}
+
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        rec["cost"] = {k: v for k, v in ca.items()
+                       if k in ("flops", "bytes accessed")
+                       or k.startswith("bytes accessed")}
+    except Exception as e:  # pragma: no cover
+        rec["cost"] = {"error": str(e)}
+
+    try:
+        from repro.launch import hlo_cost
+        hc = hlo_cost.analyze(compiled.as_text())
+        rec["hlo_cost"] = {"flops": hc["flops"], "bytes": hc["bytes"],
+                           "transcendentals": hc["transcendentals"]}
+        rec["collectives"] = hc["collectives"]
+    except Exception as e:  # pragma: no cover
+        rec["hlo_cost"] = {"error": str(e)}
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--optimized", action="store_true",
+                    help="enable all REPRO_OPT_* §Perf flags; results are "
+                         "suffixed __opt")
+    ap.add_argument("--opts", default=None,
+                    help="comma list of §Perf flags to enable "
+                         "(static_window,attn_bf16,active_gather,"
+                         "seq_parallel); suffix __opt-<names>")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    suffix = ""
+    if args.optimized:
+        from repro.models import opt_flags
+        opt_flags.set_all(True)
+        suffix = "__opt"
+    elif args.opts:
+        from repro.models import opt_flags
+        names = args.opts.split(",")
+        opt_flags.set_named(names)
+        suffix = "__opt-" + "-".join(n.strip() for n in names)
+
+    os.makedirs(args.out, exist_ok=True)
+    if args.all:
+        todo = [(c.name, s.name) for c, s in pairs()]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        todo = [(args.arch, args.shape)]
+
+    meshes = [False, True]
+    if args.multi_pod:
+        meshes = [True]
+    if args.single_pod_only:
+        meshes = [False]
+
+    failures = []
+    for arch, shape in todo:
+        for mp in meshes:
+            tag = (f"{arch.replace('.', '_')}__{shape}__"
+                   f"{'multi' if mp else 'single'}{suffix}")
+            path = os.path.join(args.out, tag + ".json")
+            if args.skip_existing and os.path.exists(path):
+                print(f"[skip] {tag}")
+                continue
+            print(f"[dryrun] {tag} ...", flush=True)
+            try:
+                rec = lower_pair(arch, shape, mp)
+                rec["ok"] = True
+                print(f"  ok: lower {rec['lower_s']}s compile "
+                      f"{rec.get('compile_s')}s flops/dev="
+                      f"{rec.get('cost', {}).get('flops'):.3e}"
+                      if rec.get('cost', {}).get('flops') else
+                      f"  ok: lower {rec['lower_s']}s", flush=True)
+            except Exception as e:
+                rec = {"arch": arch, "shape": shape, "ok": False,
+                       "error": f"{type(e).__name__}: {e}",
+                       "trace": traceback.format_exc()[-2000:]}
+                failures.append(tag)
+                print(f"  FAIL: {type(e).__name__}: {e}", flush=True)
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+    if failures:
+        print(f"\n{len(failures)} FAILURES:\n" + "\n".join(failures))
+        raise SystemExit(1)
+    print("\nall dry-runs passed")
+
+
+if __name__ == "__main__":
+    main()

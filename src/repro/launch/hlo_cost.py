@@ -1,0 +1,325 @@
+"""Loop-aware HLO cost analysis from optimized HLO text.
+
+XLA's built-in ``compiled.cost_analysis()`` counts each ``while`` body ONCE,
+so scan-over-layers models (everything here) are undercounted by ~n_layers x.
+This module parses the post-optimization, post-SPMD HLO (``compiled.as_text()``)
+and walks the computation graph:
+
+  * dot flops      = 2 * result_elems * prod(lhs contracting dim sizes)
+  * elementwise    = 1 flop per result element (dots dominate; documented)
+  * while          = (body + cond cost) * known_trip_count  (from XLA's
+                     backend_config — exact for lax.scan/fori)
+  * fusion/call    = cost of the called computation
+  * bytes accessed = sum of (operands + result) buffer sizes of top-level ops
+                     (fusions materialize their boundary buffers only — the
+                     XLA fusion memory-traffic model), loop bodies x trips
+  * collectives    = per-op result bytes x trips, bucketed by collective kind
+
+Used by the dry-run for §Roofline. Per-device numbers (HLO is post-SPMD).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16, "token": 0, "s4": 1, "u4": 1}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{\s*$")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(.*?\)|[a-z0-9]+\[[\d,]*\](?:{[^}]*})?)\s+([\w\-]+)\((.*)$")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+# opcodes that don't touch memory / are free
+_FREE = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+         "after-all", "token", "partition-id", "replica-id", "iota",
+         "reshape", "broadcast"}
+
+_ELEMWISE_FLOPS = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "tanh", "log", "rsqrt", "sqrt", "power",
+    "floor", "ceil", "sign", "compare", "select", "and", "or", "not", "xor",
+    "convert", "exponential-minus-one", "log-plus-one", "remainder",
+    "clamp", "round-nearest-afz", "cosine", "sine", "atan2", "logistic",
+    "erf", "cbrt",
+}
+
+
+def _shape_bytes_elems(type_str: str) -> Tuple[int, int]:
+    """Total (bytes, elems) of a (possibly tuple) type string."""
+    total_b = total_e = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        e = 1
+        for d in dims.split(","):
+            if d:
+                e *= int(d)
+        total_e += e
+        total_b += e * _DTYPE_BYTES[dt]
+    return total_b, total_e
+
+
+def _split_operands(rest: str) -> Tuple[List[str], str]:
+    """rest starts right after the opening paren of opcode(...). Returns
+    (operand names, attr tail)."""
+    depth = 1
+    i = 0
+    while i < len(rest) and depth:
+        if rest[i] == "(":
+            depth += 1
+        elif rest[i] == ")":
+            depth -= 1
+        i += 1
+    inner, tail = rest[: i - 1], rest[i:]
+    ops = [o.strip().lstrip("%") for o in re.split(r",\s*(?=%)", inner)
+           if o.strip().startswith("%")]
+    return ops, tail
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    transcendentals: float = 0.0
+    collectives: Dict[str, Dict[str, float]] = dataclasses.field(
+        default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.transcendentals += other.transcendentals * mult
+        for k, v in other.collectives.items():
+            rec = self.collectives.setdefault(k, {"count": 0.0, "bytes": 0.0})
+            rec["count"] += v["count"] * mult
+            rec["bytes"] += v["bytes"] * mult
+
+    def as_dict(self) -> dict:
+        return {"flops": self.flops, "bytes": self.bytes,
+                "transcendentals": self.transcendentals,
+                "collectives": self.collectives}
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.comps: Dict[str, List[dict]] = {}
+        self.entry: Optional[str] = None
+        self._parse(text)
+        self._memo: Dict[str, Cost] = {}
+
+    def _parse(self, text: str) -> None:
+        cur = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if not line:
+                continue
+            hdr = _COMP_HDR.match(line.strip())
+            if hdr and ("->" in line) and line.strip().endswith("{"):
+                cur = hdr.group(1)
+                self.comps[cur] = []
+                if line.strip().startswith("ENTRY"):
+                    self.entry = cur
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            if cur is None:
+                continue
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            name, type_str, opcode, rest = m.groups()
+            operands, tail = _split_operands(rest)
+            self.comps[cur].append({
+                "name": name, "type": type_str, "op": opcode,
+                "operands": operands, "attrs": tail, "line": line,
+            })
+
+    def _fusion_operand_bytes(self, comp: str, operand_names, outer_shapes
+                              ) -> float:
+        """Effective bytes read for a fusion's operands.
+
+        * a parameter consumed only by dynamic-slice/gather reads the slice;
+        * a parameter that is the in-place buffer (operand 0) of a
+          dynamic-update-slice reads ~the update size, not the whole buffer
+          (scan ys-stacking would otherwise count the full stacked cache
+          every iteration).
+        """
+        ops = self.comps.get(comp, [])
+        shapes_in = {o["name"]: o["type"] for o in ops}
+        param_of = {}
+        for o in ops:
+            if o["op"] == "parameter":
+                m = re.search(r"parameter\((\d+)\)", o["line"])
+                if m:
+                    param_of[o["name"]] = int(m.group(1))
+        sliced_bytes: Dict[int, float] = {}
+        bad = set()
+        for o in ops:
+            for pos, nm in enumerate(o["operands"]):
+                if nm not in param_of:
+                    continue
+                idx = param_of[nm]
+                if o["op"] in ("dynamic-slice", "gather", "slice") and pos == 0:
+                    sliced_bytes[idx] = sliced_bytes.get(idx, 0.0) + \
+                        _shape_bytes_elems(o["type"])[0]
+                elif o["op"] == "dynamic-update-slice" and pos == 0:
+                    upd = o["operands"][1] if len(o["operands"]) > 1 else None
+                    ub = _shape_bytes_elems(shapes_in.get(upd, ""))[0] if upd \
+                        else 0
+                    sliced_bytes[idx] = sliced_bytes.get(idx, 0.0) + ub
+                else:
+                    bad.add(idx)
+        totalb = 0.0
+        for i, nm in enumerate(operand_names):
+            full = _shape_bytes_elems(outer_shapes.get(nm, ""))[0]
+            if i in sliced_bytes and i not in bad:
+                totalb += min(full, sliced_bytes[i])
+            else:
+                totalb += full
+        return totalb
+
+    def _fusion_result_bytes(self, comp: str, res_b: float) -> float:
+        """Effective bytes written by a fusion: dynamic-update-slice roots
+        write the update region, not the whole aliased buffer."""
+        ops = self.comps.get(comp, [])
+        shapes_in = {o["name"]: o["type"] for o in ops}
+        dus_res = dus_upd = 0.0
+        for o in ops:
+            if o["op"] == "dynamic-update-slice":
+                dus_res += _shape_bytes_elems(o["type"])[0]
+                if len(o["operands"]) > 1:
+                    dus_upd += _shape_bytes_elems(
+                        shapes_in.get(o["operands"][1], ""))[0]
+        return max(res_b - dus_res, 0.0) + dus_upd
+
+    # -- cost ---------------------------------------------------------------
+    def comp_cost(self, comp: str) -> Cost:
+        if comp in self._memo:
+            return self._memo[comp]
+        self._memo[comp] = Cost()  # cycle guard
+        shapes = {op["name"]: op["type"] for op in self.comps.get(comp, [])}
+        total = Cost()
+        for op in self.comps.get(comp, []):
+            oc = op["op"]
+            if oc in _FREE:
+                continue
+            res_b, res_e = _shape_bytes_elems(op["type"])
+            opnd_b = sum(_shape_bytes_elems(shapes.get(o, ""))[0]
+                         for o in op["operands"])
+
+            if oc == "while":
+                trips = 1.0
+                tm = _TRIP_RE.search(op["attrs"])
+                if tm:
+                    trips = float(tm.group(1))
+                body = _BODY_RE.search(op["attrs"])
+                cond = _COND_RE.search(op["attrs"])
+                if body:
+                    total.add(self.comp_cost(body.group(1)), trips)
+                if cond:
+                    total.add(self.comp_cost(cond.group(1)), trips)
+                continue
+
+            if oc in ("fusion", "call", "async-start"):
+                cm = _CALLS_RE.search(op["attrs"]) or \
+                    _TO_APPLY_RE.search(op["attrs"])
+                eff_opnd, eff_res = opnd_b, res_b
+                if cm:
+                    inner = self.comp_cost(cm.group(1))
+                    c = Cost()
+                    c.add(inner)
+                    c.bytes = 0.0  # fusion interior doesn't touch HBM
+                    total.add(c)
+                    # slice-aware traffic (see helper docstrings)
+                    eff_opnd = self._fusion_operand_bytes(
+                        cm.group(1), op["operands"], shapes)
+                    eff_res = self._fusion_result_bytes(cm.group(1), res_b)
+                total.bytes += eff_res + eff_opnd
+                continue
+
+            if oc in ("reduce", "reduce-window", "scatter", "gather",
+                      "dynamic-slice", "dynamic-update-slice", "sort",
+                      "select-and-scatter", "concatenate", "slice", "pad",
+                      "copy", "transpose", "rng-bit-generator", "cholesky",
+                      "triangular-solve", "clamp", "map"):
+                if oc in ("dynamic-slice", "gather", "slice"):
+                    # reads the slice, not the whole operand
+                    total.bytes += 2 * res_b
+                elif oc == "dynamic-update-slice":
+                    upd_b = _shape_bytes_elems(
+                        shapes.get(op["operands"][1], ""))[0] \
+                        if len(op["operands"]) > 1 else res_b
+                    total.bytes += 2 * upd_b  # read update, write region
+                else:
+                    total.bytes += res_b + opnd_b
+                if oc == "reduce":
+                    opnd_e = sum(_shape_bytes_elems(shapes.get(o, ""))[1]
+                                 for o in op["operands"])
+                    total.flops += opnd_e  # ~1 flop per element reduced
+                continue
+
+            base = oc.replace("-start", "")
+            if base in COLLECTIVES:
+                rec = total.collectives.setdefault(
+                    base, {"count": 0.0, "bytes": 0.0})
+                rec["count"] += 1
+                rec["bytes"] += res_b
+                total.bytes += res_b + opnd_b
+                continue
+            if oc.endswith("-done"):
+                continue
+
+            if oc == "dot":
+                lhs = op["operands"][0] if op["operands"] else None
+                k = 1
+                cm = _LHS_CONTRACT_RE.search(op["attrs"])
+                if cm and lhs and lhs in shapes:
+                    sm = _SHAPE_RE.search(shapes[lhs])
+                    if sm:
+                        dims = [int(d) for d in sm.group(2).split(",") if d]
+                        for idx in cm.group(1).split(","):
+                            if idx:
+                                k *= dims[int(idx)]
+                total.flops += 2.0 * res_e * k
+                total.bytes += res_b + opnd_b
+                continue
+
+            if oc == "convolution":
+                total.flops += 2.0 * res_e  # no convs in this codebase
+                total.bytes += res_b + opnd_b
+                continue
+
+            if oc in _ELEMWISE_FLOPS:
+                total.flops += res_e
+                if oc in ("exponential", "tanh", "log", "rsqrt", "sqrt",
+                          "power", "logistic", "erf", "cosine", "sine"):
+                    total.transcendentals += res_e
+                total.bytes += res_b + opnd_b
+                continue
+
+            # default: count memory traffic only
+            total.bytes += res_b + opnd_b
+        self._memo[comp] = total
+        return total
+
+    def entry_cost(self) -> Cost:
+        assert self.entry, "no ENTRY computation found"
+        return self.comp_cost(self.entry)
+
+
+def analyze(hlo_text: str) -> dict:
+    return HloModule(hlo_text).entry_cost().as_dict()

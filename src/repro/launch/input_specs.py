@@ -1,0 +1,62 @@
+"""Abstract inputs (ShapeDtypeStruct) + shardings for every (arch, shape).
+
+``input_specs(cfg, shape)`` returns the batch/step/cache stand-ins the
+dry-run lowers against — weak-type-correct, shardable, zero allocation.
+Modality frontends are stubbed here per the assignment: audio gets
+``frames`` (B, S, frontend_dim) embeddings, VLM gets ``patch_embeds``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models.layers import PDT
+from repro.models.model import ModelBundle
+
+SDS = jax.ShapeDtypeStruct
+
+# bounded long-context adaptation (DESIGN.md §5): ring-cache capacity used for
+# the 500k decode shape on window/hybrid archs.
+LONG_CACHE_CAP = 131_072
+
+
+def train_batch_abs(cfg: ArchConfig, shape: InputShape) -> Dict[str, SDS]:
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": SDS((B, S), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = SDS((B, cfg.n_frontend_tokens,
+                                     cfg.frontend_dim), PDT)
+    if cfg.family == "encdec":
+        batch["frames"] = SDS((B, S, cfg.frontend_dim), PDT)
+    return batch
+
+
+def decode_capacity(cfg: ArchConfig, shape: InputShape) -> int:
+    if shape.name == "long_500k":
+        return min(shape.seq_len, LONG_CACHE_CAP)
+    return shape.seq_len
+
+
+def decode_abs(cfg: ArchConfig, shape: InputShape, bundle: ModelBundle
+               ) -> Tuple[Dict[str, SDS], Dict]:
+    B = shape.global_batch
+    cap = decode_capacity(cfg, shape)
+    step = {"token": SDS((B, 1), jnp.int32)}
+    extras = None
+    if cfg.family == "encdec":
+        extras = {"mem_len": min(shape.seq_len, LONG_CACHE_CAP)}
+    cache = jax.eval_shape(
+        functools.partial(bundle.init_cache, B, cap, extras))
+    return step, cache
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape, bundle: ModelBundle):
+    """Returns (kind, abstract-args dict) for the step to lower."""
+    if shape.kind in ("train", "prefill"):
+        return {"batch": train_batch_abs(cfg, shape)}
+    step, cache = decode_abs(cfg, shape, bundle)
+    return {"step": step, "cache": cache}

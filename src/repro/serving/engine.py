@@ -1,0 +1,288 @@
+"""DuoServe-MoE serving engine — the live runtime (paper §V).
+
+Executes a MoE decoder layer-by-layer so the Python-level Expert Dispatcher
+can interleave host->device expert transfers with dispatched computation:
+
+  * prefill: per layer — attention dispatched, gate read back, tokens grouped
+    by expert, then the policy's PrefillPlan drives the fetch/compute
+    pipeline. With JAX async dispatch, issuing `device_put(expert e+1)` after
+    dispatching `compute(expert e)` overlaps them (two-stream analogue).
+  * decode: per layer — gate result compared against prefetched experts
+    (sync point #1); misses corrected with a blocking fetch; the ExpertMLP is
+    dispatched on the "prediction stream" (async) to choose layer l+1's
+    prefetch while layer l's experts compute.
+
+Routed-expert weights live ONLY in the HostExpertStore (host RAM); the device
+holds non-MoE weights + a k-slot expert cache — the paper's memory model.
+The engine records routing traces + cache events; the simulator replays them
+with hardware constants to produce the paper's latency/memory tables.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.cache import DeviceExpertCache, HostExpertStore
+from repro.core.scheduler import BaseScheduler, DuoServeScheduler, make_scheduler
+from repro.core.state import StateConstructor
+from repro.core.tracer import ExpertsTracer, TraceStats
+from repro.models import layers as L
+from repro.models import moe_layer as M
+from repro.models.layers import PDT
+from repro.models.model import attn_dims
+
+
+@dataclasses.dataclass
+class RequestResult:
+    tokens: np.ndarray              # generated token ids [T]
+    prefill_active: List[List[int]]  # union of experts per layer
+    decode_trace: np.ndarray        # [T, L, k]
+    pred_trace: np.ndarray          # [T, L, k] DuoServe predictions (-1 pad)
+    ttft_wall: float
+    e2e_wall: float
+    hits: int
+    misses: int
+
+
+class MoEServingEngine:
+    """Single-request engine for dense-family MoE configs (paper scope)."""
+
+    def __init__(self, cfg: ArchConfig, params, policy: str = "duo", *,
+                 stats: Optional[TraceStats] = None, predictor=None,
+                 cache_capacity: Optional[int] = None,
+                 temperature: float = 0.8, sample_seed: int = 0):
+        assert cfg.is_moe and cfg.family in ("moe", "dense"), \
+            "engine schedules experts; use bundle.decode for non-MoE archs"
+        assert cfg.n_dense_layers == 0, "engine assumes uniform MoE stack"
+        self.cfg = cfg
+        self.L = cfg.n_layers
+        self.E = cfg.n_experts
+        self.k = cfg.top_k
+        self.vp = L.vocab_pad_of(cfg.vocab)
+
+        lp = params["layers"]
+        self.store = HostExpertStore.from_params(lp["moe"], self.L, self.E)
+        # device-resident: everything except routed expert weights
+        moe_dev = {k: v for k, v in lp["moe"].items()
+                   if k not in ("w1", "w3", "w2")}
+        self.dev = {
+            "embed": params["embed"], "ln_f": params["ln_f"],
+            "layers": {k: v for k, v in lp.items() if k != "moe"},
+            "moe": moe_dev,
+        }
+        self.temperature = temperature
+        self._rng = np.random.default_rng(sample_seed)
+        sc = StateConstructor(stats) if stats is not None else None
+        self.sched = make_scheduler(
+            policy, self.L, self.E, self.k, self.store.bytes_per_expert,
+            stats=stats, predictor=predictor, state_constructor=sc,
+            capacity=cache_capacity)
+        self.cache = DeviceExpertCache(
+            self.store, capacity=self.sched.cache.capacity)
+        # mirror residency decisions into the device cache
+        self._jit_fns()
+
+    # -- jitted per-layer kernels (compiled once; reused for every layer) ----
+    def _jit_fns(self):
+        cfg = self.cfg
+        dims = attn_dims(cfg)
+        eps = cfg.rms_eps
+
+        @jax.jit
+        def attn_prefill(lp, x):
+            h, (k, v) = L.self_attn_full(L.rms_norm(x, lp["ln1"], eps),
+                                         lp["attn"], dims)
+            return x + h, k, v
+
+        @jax.jit
+        def attn_decode(lp, x, ck, cv, sp, slot, pos):
+            h, ck, cv = L.self_attn_decode(
+                L.rms_norm(x, lp["ln1"], eps), lp["attn"], dims,
+                ck, cv, sp, slot, pos)
+            return x + h, ck, cv
+
+        @jax.jit
+        def gate(moe_dev, lp, x):
+            xn = L.rms_norm(x, lp["ln2"], eps)
+            x2 = xn.reshape(-1, xn.shape[-1])
+            w, ids, probs = M.route(x2, moe_dev["router"], self.E, self.k)
+            return xn, w, ids
+
+        @jax.jit
+        def expert_apply(xn, w1, w3, w2, gate_w):
+            x2 = xn.reshape(-1, xn.shape[-1])
+            h = jax.nn.silu(x2 @ w1) * (x2 @ w3)
+            return ((h @ w2).astype(jnp.float32)
+                    * gate_w[:, None]).astype(xn.dtype)
+
+        @jax.jit
+        def shared_apply(moe_dev, xn):
+            if "sw1" not in moe_dev:
+                return jnp.zeros_like(xn.reshape(-1, xn.shape[-1]))
+            x2 = xn.reshape(-1, xn.shape[-1])
+            h = jax.nn.silu(x2 @ moe_dev["sw1"]) * (x2 @ moe_dev["sw3"])
+            return h @ moe_dev["sw2"]
+
+        @jax.jit
+        def head(p_lnf, embed, x_last):
+            x = L.rms_norm(x_last, p_lnf, self.cfg.rms_eps)
+            lg = x @ embed.T.astype(x.dtype)
+            mask = jnp.arange(self.vp) < self.cfg.vocab
+            return jnp.where(mask, lg.astype(jnp.float32), -1e9)
+
+        self._attn_prefill = attn_prefill
+        self._attn_decode = attn_decode
+        self._gate = gate
+        self._expert = expert_apply
+        self._shared = shared_apply
+        self._head = head
+
+    def _layer(self, l: int):
+        return jax.tree.map(lambda a: a[l], self.dev["layers"])
+
+    def _moe_dev(self, l: int):
+        return jax.tree.map(lambda a: a[l], self.dev["moe"])
+
+    def _run_experts_prefill(self, l, xn, w, ids, plan):
+        """Execute the PrefillPlan: grouped per-expert compute with the
+        policy's fetch schedule (async device_put between dispatches)."""
+        T = xn.shape[0] * xn.shape[1]
+        acc = self._shared(self._moe_dev(l), xn)
+        order = plan.order
+        # stage fetches according to the plan
+        if plan.prefetch_all_first:
+            for e in plan.fetches:
+                self.cache.prefetch((l, e))
+        elif plan.overlap_first and order:
+            self.cache.prefetch((l, order[0]))
+        for i, e in enumerate(order):
+            if not plan.prefetch_all_first:
+                if plan.pipelined and i + 1 < len(order):
+                    # comm stream: next expert streams while e computes
+                    self.cache.prefetch((l, order[i + 1]))
+                elif not plan.pipelined:
+                    self.cache.prefetch((l, e))
+            w1, w3, w2 = self.cache.get((l, e))
+            gate_w = (w * (ids == e)).sum(-1).reshape(-1)
+            acc = acc + self._expert(xn, w1, w3, w2, gate_w)
+        return acc.reshape(xn.shape)
+
+    def prefill(self, tokens: np.ndarray):
+        """tokens: [1, S]. Returns (next_token, kv_caches, active_per_layer,
+        per-token paths [S? no — per-prompt prefill paths not tracked])."""
+        x = self.dev["embed"].at[jnp.asarray(tokens)].get(mode="clip")
+        S = tokens.shape[1]
+        kc, vc = [], []
+        active: List[List[int]] = []
+        paths = np.zeros((S, self.L, self.k), np.int32)
+        for l in range(self.L):
+            lp = self._layer(l)
+            x, k_, v_ = self._attn_prefill(lp, x)
+            xn, w, ids = self._gate(self._moe_dev(l), lp, x)
+            ids_np = np.asarray(ids)  # sync: gate result needed by dispatcher
+            paths[:, l] = ids_np.reshape(S, self.k)
+            act = sorted(set(int(e) for e in ids_np.ravel()))
+            plan = self.sched.prefill_plan(l, act)
+            y = self._run_experts_prefill(l, xn, w, ids, plan)
+            x = x + y
+            kc.append(k_)
+            vc.append(v_)
+            self.sched.end_layer(l)
+            active.append(act)
+        logits = self._head(self.dev["ln_f"], self.dev["embed"], x[:, -1])
+        return self._sample(logits), (kc, vc), active, paths
+
+    def _sample(self, logits) -> int:
+        lg = np.asarray(logits, np.float64)[0]
+        if self.temperature <= 0:
+            return int(lg.argmax())
+        lg = lg / self.temperature
+        lg -= lg.max()
+        p = np.exp(lg)
+        p /= p.sum()
+        return int(self._rng.choice(len(p), p=p))
+
+    def decode(self, first_token: int, kv, prompt_len: int, max_new: int):
+        kc, vc = kv
+        cap = prompt_len + max_new + 1
+        Wpad = cap
+        kc = [jnp.pad(k, ((0, 0), (0, Wpad - k.shape[1]), (0, 0), (0, 0)))
+              for k in kc]
+        vc = [jnp.pad(v, ((0, 0), (0, Wpad - v.shape[1]), (0, 0), (0, 0)))
+              for v in vc]
+        sp = jnp.pad(jnp.arange(prompt_len, dtype=jnp.int32),
+                     (0, Wpad - prompt_len), constant_values=-1)
+        out = [first_token]
+        trace = np.zeros((max_new, self.L, self.k), np.int32)
+        pred_trace = np.full((max_new, self.L, self.k), -1, np.int32)
+        for t in range(max_new):
+            tok = jnp.asarray([[out[-1]]], jnp.int32)
+            x = self.dev["embed"].at[tok].get(mode="clip")
+            pos = jnp.int32(prompt_len + t)
+            slot = int(prompt_len + t) % Wpad
+            sp = sp.at[slot].set(prompt_len + t)
+            if isinstance(self.sched, DuoServeScheduler):
+                self.sched.begin_decode_step()
+            for l in range(self.L):
+                lp = self._layer(l)
+                x, kc[l], vc[l] = self._attn_decode(lp, x, kc[l], vc[l], sp,
+                                                    slot, pos)
+                xn, w, ids = self._gate(self._moe_dev(l), lp, x)
+                sel = [int(e) for e in np.asarray(ids).ravel()[: self.k]]
+                trace[t, l] = sel
+                plan = self.sched.decode_plan(l, sel)
+                np_pred = plan.predicted[: self.k]
+                pred_trace[t, l, : len(np_pred)] = np_pred
+                # correction fetches for misses (sync point #1)
+                for e in plan.misses:
+                    self.cache.prefetch((l, e))
+                    self.cache.wait((l, e))
+                acc = self._shared(self._moe_dev(l), xn)
+                for e in sel:
+                    w1, w3, w2 = self.cache.get((l, e))
+                    gate_w = (w * (ids == e)).sum(-1).reshape(-1)
+                    acc = acc + self._expert(xn, w1, w3, w2, gate_w)
+                x = x + acc.reshape(x.shape)
+                # prediction stream: prefetch next layer's predicted experts
+                for e in plan.prefetch_next:
+                    self.cache.prefetch((l + 1, e))
+            logits = self._head(self.dev["ln_f"], self.dev["embed"], x[:, -1])
+            out.append(self._sample(logits))
+        return np.asarray(out[1:]), trace, pred_trace
+
+    def serve(self, prompt: np.ndarray, max_new: int = 16) -> RequestResult:
+        self.sched.begin_request()
+        h0, m0 = self.sched.cache.hits, self.sched.cache.misses
+        t0 = time.perf_counter()
+        prompt = np.asarray(prompt, np.int32).reshape(1, -1)
+        first, kv, active, _ = self.prefill(prompt)
+        t1 = time.perf_counter()
+        toks, trace, pred = self.decode(first, kv, prompt.shape[1], max_new)
+        t2 = time.perf_counter()
+        return RequestResult(
+            tokens=np.concatenate([[first], toks]),
+            prefill_active=active, decode_trace=trace, pred_trace=pred,
+            ttft_wall=t1 - t0, e2e_wall=t2 - t0,
+            hits=self.sched.cache.hits - h0,
+            misses=self.sched.cache.misses - m0)
+
+
+def collect_traces(cfg: ArchConfig, params, prompts: Sequence[np.ndarray],
+                   max_new: int = 8) -> Tuple[ExpertsTracer, List[RequestResult]]:
+    """Offline preprocess (paper §IV-A): run an ODF-scheduled engine over a
+    small dataset slice and record per-token activation paths."""
+    engine = MoEServingEngine(cfg, params, policy="odf")
+    tracer = ExpertsTracer(cfg.n_layers, cfg.n_experts, cfg.top_k)
+    results = []
+    for p in prompts:
+        r = engine.serve(p, max_new=max_new)
+        results.append(r)
+        tracer.add_paths(r.decode_trace)
+    return tracer, results

@@ -1,0 +1,65 @@
+"""Checkpointing: pytree <-> single .npz with '/'-joined key paths.
+
+No external deps (orbax unavailable offline); handles bf16 via a uint16 view
+with a dtype sidecar. Atomic via tmp-file rename.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save(path: str, tree, extra: Dict[str, Any] | None = None) -> None:
+    flat = _flatten(tree)
+    arrays, dtypes = {}, {}
+    for k, v in flat.items():
+        a = np.asarray(v)
+        dtypes[k] = str(a.dtype)
+        if a.dtype == jnp.bfloat16:
+            a = a.view(np.uint16)
+        arrays[k] = a
+    arrays["__meta__"] = np.frombuffer(
+        json.dumps({"dtypes": dtypes, "extra": extra or {}}).encode(), np.uint8)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)))
+    os.close(fd)
+    np.savez(tmp, **arrays)
+    os.replace(tmp + ".npz" if not tmp.endswith(".npz") else tmp, path)
+
+
+def load(path: str, like=None):
+    """Load a checkpoint. If `like` is given, restore into its treedef."""
+    z = np.load(path)
+    meta = json.loads(bytes(z["__meta__"]).decode())
+    flat = {}
+    for k in z.files:
+        if k == "__meta__":
+            continue
+        a = z[k]
+        if meta["dtypes"][k] == "bfloat16":
+            a = a.view(jnp.bfloat16)
+        flat[k] = jnp.asarray(a)
+    if like is None:
+        return flat, meta["extra"]
+    leaves_like = _flatten(like)
+    assert set(leaves_like) == set(flat), (
+        f"checkpoint keys mismatch: {set(leaves_like) ^ set(flat)}")
+    treedef = jax.tree_util.tree_structure(like)
+    ordered = [flat[k] for k in leaves_like]  # same insertion order as like
+    return jax.tree_util.tree_unflatten(treedef, ordered), meta["extra"]

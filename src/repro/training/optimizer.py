@@ -1,0 +1,71 @@
+"""AdamW in pure JAX (no optax in this container).
+
+Moments are f32 regardless of param dtype (mixed-precision convention:
+bf16 params, f32 optimizer state). State tree mirrors the param tree, so the
+same partition rules apply to both.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(jnp.zeros((), jnp.int32),
+                          jax.tree.map(zeros, params),
+                          jax.tree.map(zeros, params))
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        lr = self.lr(step) if callable(self.lr) else self.lr
+
+        # global-norm clip in f32
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        gn = jnp.sqrt(sum(jnp.sum(g * g) for g in jax.tree.leaves(g32)))
+        scale = jnp.minimum(1.0, self.grad_clip / jnp.maximum(gn, 1e-9))
+        g32 = jax.tree.map(lambda g: g * scale, g32)
+
+        m = jax.tree.map(lambda m_, g: self.b1 * m_ + (1 - self.b1) * g,
+                         state.m, g32)
+        v = jax.tree.map(lambda v_, g: self.b2 * v_ + (1 - self.b2) * g * g,
+                         state.v, g32)
+        bc1 = 1 - self.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + self.eps)
+            if p.ndim >= 2:  # decay matrices only (norms/biases exempt)
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, AdamWState(step, m, v), gn
+
+
+def cosine_schedule(peak: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return peak * jnp.where(s < warmup, warm, cos)
+    return lr

