@@ -1,0 +1,124 @@
+"""Concurrent-load QoS benchmark: Poisson arrivals into the continuous-
+batching engine, p50/p99 TTFT + TPOT vs offered load.
+
+The paper reports single-request TTFT/E2E; this driver measures the serving
+regime those SLOs actually matter in — requests arriving mid-flight, decode
+batched across in-flight requests, one shared expert cache. Per offered load
+it reports:
+
+  * TTFT p50/p99  (arrival -> first token, includes queueing)
+  * TPOT p50/p99  (per-output-token decode latency after the first token)
+  * throughput (tokens/s), mean decode batch size, shed (SLO-rejected) count
+
+  PYTHONPATH=src python benchmarks/bench_concurrent.py \
+      --rates 0.5,1.0,2.0 --requests 8 --max-new 6 [--ttft-slo 30]
+"""
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_config, reduced
+from repro.core.qos import AdmissionController, percentile_report
+from repro.data.pipeline import PromptWorkload, squad_like
+from repro.models.model import build
+from repro.serving.batching import BatchedServingEngine, RequestQueue
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+
+
+def run_load(cfg, params, prompts, *, rate: float, max_new: int,
+             max_batch: int, policy: str, ttft_slo, seed: int = 0) -> dict:
+    """Offer `prompts` at Poisson rate `rate` req/s; drain; summarize."""
+    rng = np.random.default_rng(seed)
+    inter = rng.exponential(1.0 / rate, size=len(prompts))
+    t0 = time.perf_counter()
+    arrivals = t0 + np.cumsum(inter)
+
+    queue = RequestQueue(AdmissionController(default_ttft_slo=ttft_slo))
+    eng = BatchedServingEngine(cfg, params, policy=policy,
+                               max_batch=max_batch,
+                               max_seq=max(len(p) for p in prompts)
+                               + max_new + 2,
+                               queue=queue, temperature=0.0)
+    pending = list(zip(arrivals, prompts))
+    while pending or len(eng.queue) or eng.running:
+        now = time.perf_counter()
+        while pending and pending[0][0] <= now:
+            arr, p = pending.pop(0)
+            eng.submit(p, max_new=max_new, arrival=arr)
+        if not eng.step(now):
+            # idle until the next arrival
+            if pending:
+                time.sleep(max(pending[0][0] - time.perf_counter(), 0.0))
+    wall = time.perf_counter() - t0
+
+    done = [r.result() for r in eng.finished]
+    ttfts = [r.ttft_wall for r in done]
+    tpots = [(r.e2e_wall - r.ttft_wall) / max(len(r.tokens) - 1, 1)
+             for r in done]
+    total_tokens = sum(len(r.tokens) for r in done)
+    rec = {
+        "rate_req_s": rate,
+        "offered": len(prompts),
+        "completed": len(done),
+        "rejected": len(eng.queue.rejected),
+        "ttft": percentile_report(ttfts),
+        "tpot": percentile_report(tpots),
+        "tokens_per_s": total_tokens / max(wall, 1e-9),
+        "mean_decode_batch": (float(np.mean(eng.decode_batch_hist))
+                              if eng.decode_batch_hist else 0.0),
+        "wall_s": wall,
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--rates", default="0.5,2.0",
+                    help="comma list of offered loads (requests/s)")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-new", type=int, default=5)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--policy", default="duo+")
+    ap.add_argument("--ttft-slo", type=float, default=None,
+                    help="seconds; requests predicted to breach are shed")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch))
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    wl = PromptWorkload(squad_like(cfg.vocab), seed=11)
+    prompts = [p[: args.prompt_len] for p, _ in wl.prompts(args.requests)]
+
+    print(f"{'rate':>6s} {'done':>5s} {'shed':>5s} {'ttft_p50':>9s} "
+          f"{'ttft_p99':>9s} {'tpot_p50':>9s} {'tpot_p99':>9s} "
+          f"{'tok/s':>7s} {'avgB':>5s}")
+    records = []
+    for rate in [float(r) for r in args.rates.split(",")]:
+        rec = run_load(cfg, params, prompts, rate=rate,
+                       max_new=args.max_new, max_batch=args.max_batch,
+                       policy=args.policy, ttft_slo=args.ttft_slo)
+        records.append(rec)
+        print(f"{rate:6.2f} {rec['completed']:5d} {rec['rejected']:5d} "
+              f"{rec['ttft']['p50']:8.2f}s {rec['ttft']['p99']:8.2f}s "
+              f"{rec['tpot']['p50']:8.2f}s {rec['tpot']['p99']:8.2f}s "
+              f"{rec['tokens_per_s']:7.2f} {rec['mean_decode_batch']:5.2f}")
+
+    out = args.out
+    if out is None:
+        os.makedirs(RESULTS, exist_ok=True)
+        out = os.path.join(RESULTS, "concurrent_qos.json")
+    with open(out, "w") as f:
+        json.dump(records, f, indent=1)
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

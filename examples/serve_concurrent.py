@@ -1,0 +1,81 @@
+"""Continuous-batching demo: concurrent requests through the batched engine
+vs the same requests served one-by-one, with token-parity verification and
+an SLO-shedding illustration.
+
+  PYTHONPATH=src python examples/serve_concurrent.py --requests 4 --max-new 5
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_config, reduced
+from repro.core.qos import AdmissionController, LatencyModel, percentile_report
+from repro.data.pipeline import PromptWorkload, squad_like
+from repro.models.model import build
+from repro.serving.batching import BatchedServingEngine, RequestQueue
+from repro.serving.engine import MoEServingEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=5)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--policy", default="duo+")
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch))
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    wl = PromptWorkload(squad_like(cfg.vocab), seed=5)
+    prompts = [p[:16] for p, _ in wl.prompts(args.requests)]
+
+    # sequential baseline (paper-scope engine, one request at a time)
+    seq = MoEServingEngine(cfg, params, policy=args.policy, temperature=0.0)
+    t0 = time.perf_counter()
+    seq_results = [seq.serve(p, max_new=args.max_new) for p in prompts]
+    seq_wall = time.perf_counter() - t0
+
+    # continuous batching: all requests in flight, one shared expert cache
+    eng = BatchedServingEngine(cfg, params, policy=args.policy,
+                               max_batch=args.max_batch, max_seq=64,
+                               temperature=0.0)
+    t0 = time.perf_counter()
+    for p in prompts:
+        eng.submit(p, max_new=args.max_new)
+    finished = sorted(eng.run_until_drained(), key=lambda r: r.rid)
+    batch_wall = time.perf_counter() - t0
+
+    print(f"{args.requests} requests, max_new={args.max_new}, "
+          f"policy={args.policy}")
+    ok = True
+    for i, (r, s) in enumerate(zip(finished, seq_results)):
+        same = bool(np.array_equal(r.result().tokens, s.tokens))
+        ok &= same
+        print(f"  req{i}: tokens={r.result().tokens.tolist()} "
+              f"match_sequential={same}")
+    ttfts = [r.result().ttft_wall for r in finished]
+    print(f"sequential wall: {seq_wall:6.2f}s   "
+          f"batched wall: {batch_wall:6.2f}s "
+          f"({seq_wall / max(batch_wall, 1e-9):.2f}x)")
+    print(f"batched TTFT: {percentile_report(ttfts)}  "
+          f"mean decode batch: {np.mean(eng.decode_batch_hist):.2f}")
+    assert ok, "batched tokens diverged from sequential"
+
+    # SLO shedding: a pessimistic cost model + tight deadline -> reject
+    queue = RequestQueue(AdmissionController(
+        LatencyModel(prefill_per_token=10.0), default_ttft_slo=1.0))
+    shed = BatchedServingEngine(cfg, params, policy=args.policy,
+                                max_batch=2, max_seq=64, queue=queue,
+                                temperature=0.0)
+    shed.submit(prompts[0], max_new=2)
+    shed.run_until_drained(max_steps=10)
+    print(f"SLO demo: {len(queue.rejected)} request(s) shed "
+          f"(predicted TTFT over a 1s deadline)")
+
+
+if __name__ == "__main__":
+    main()

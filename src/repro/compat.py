@@ -1,0 +1,29 @@
+"""Version-compat shims over moving JAX APIs.
+
+The repo targets the newest JAX surface (``jax.shard_map`` with ``check_vma``)
+but must run on older releases where shard_map still lives in
+``jax.experimental.shard_map`` and the kwarg is named ``check_rep``. All
+shard_map call sites import from here instead of touching ``jax`` directly.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs,
+              check_vma: Optional[bool] = None):
+    """``jax.shard_map`` when available, else the experimental fallback.
+
+    check_vma follows the new-API name; on old JAX it maps to ``check_rep``.
+    None leaves the library default in place on either version.
+    """
+    if hasattr(jax, "shard_map"):
+        kwargs = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kwargs = {} if check_vma is None else {"check_rep": check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)

@@ -1,8 +1,19 @@
-"""QoS metrics (paper §VI-A Metrics): TTFT, E2E, tail latency, throughput."""
+"""QoS metrics (paper §VI-A Metrics) + SLO-aware admission control.
+
+Metrics: TTFT, E2E, tail latency, throughput summaries over request sets.
+
+Admission (continuous-batching front-end): the paper's QoS claim is that
+TTFT/E2E stay under the SLO; under concurrent load that only holds if the
+queue sheds requests whose deadline is already unmeetable. `LatencyModel`
+keeps EWMA estimates of prefill cost per token and per-step decode cost;
+`AdmissionController` predicts a candidate's TTFT from the work queued ahead
+of it and rejects when the prediction breaches the request's TTFT deadline.
+"""
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Sequence
+import enum
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -43,3 +54,94 @@ def summarize(ttfts: Sequence[float], e2es: Sequence[float],
 def slo_attainment(e2es: Sequence[float], slo: float) -> float:
     e = np.asarray(e2es, float)
     return float((e <= slo).mean())
+
+
+def percentile_report(samples: Sequence[float],
+                      qs: Sequence[float] = (50, 99)) -> Dict[str, float]:
+    """{'p50': ..., 'p99': ...} over a latency sample set (empty -> nan)."""
+    a = np.asarray(list(samples), float)
+    if a.size == 0:
+        return {f"p{int(q)}": float("nan") for q in qs}
+    return {f"p{int(q)}": float(np.percentile(a, q)) for q in qs}
+
+
+class Admission(enum.Enum):
+    ADMIT = "admit"
+    QUEUE = "queue"      # keep waiting: deadline still reachable later
+    REJECT = "reject"    # predicted TTFT already breaches the deadline
+
+
+class LatencyModel:
+    """EWMA cost model observed from the live engine.
+
+    prefill_per_token: seconds of prefill work per prompt token.
+    decode_step: seconds per batched decode step (amortized over the batch
+    by the caller if it wants per-token cost).
+    Seeds are optimistic-but-nonzero so the first decisions are sane before
+    any observation lands.
+    """
+
+    def __init__(self, alpha: float = 0.3, prefill_per_token: float = 1e-4,
+                 decode_step: float = 1e-3):
+        self.alpha = alpha
+        self.prefill_per_token = prefill_per_token
+        self.decode_step = decode_step
+        self.n_prefills = 0
+        self.n_steps = 0
+
+    def _ewma(self, cur: float, obs: float) -> float:
+        return (1 - self.alpha) * cur + self.alpha * obs
+
+    def observe_prefill(self, n_tokens: int, wall_s: float) -> None:
+        if n_tokens <= 0:
+            return
+        self.prefill_per_token = self._ewma(self.prefill_per_token,
+                                            wall_s / n_tokens)
+        self.n_prefills += 1
+
+    def observe_decode_step(self, wall_s: float) -> None:
+        self.decode_step = self._ewma(self.decode_step, wall_s)
+        self.n_steps += 1
+
+    def predict_prefill(self, n_tokens: int) -> float:
+        return n_tokens * self.prefill_per_token
+
+
+class AdmissionController:
+    """Predicts a candidate request's TTFT and gates admission on its SLO.
+
+    Predicted TTFT = time already spent queued + prefill cost of the prompts
+    queued ahead + the candidate's own prefill cost + one decode-step drain
+    (new arrivals wait for the in-flight batched step to finish).
+    """
+
+    def __init__(self, model: Optional[LatencyModel] = None,
+                 default_ttft_slo: Optional[float] = None):
+        self.model = model or LatencyModel()
+        self.default_ttft_slo = default_ttft_slo
+        self.n_rejected = 0
+
+    def predict_ttft(self, now: float, arrival: float, prompt_len: int,
+                     queued_tokens_ahead: int) -> float:
+        waited = max(now - arrival, 0.0)
+        return (waited + self.model.predict_prefill(queued_tokens_ahead)
+                + self.model.predict_prefill(prompt_len)
+                + self.model.decode_step)
+
+    def decide(self, now: float, arrival: float, prompt_len: int,
+               queued_tokens_ahead: int,
+               ttft_slo: Optional[float] = None) -> Admission:
+        """ADMIT if the predicted TTFT (incl. the backlog ahead) fits the
+        deadline; QUEUE if only the backlog breaches it (it may drain, the
+        deadline is still reachable); REJECT if even an immediate start
+        would breach — the request is hopeless and is shed."""
+        slo = ttft_slo if ttft_slo is not None else self.default_ttft_slo
+        if slo is None:
+            return Admission.ADMIT
+        if self.predict_ttft(now, arrival, prompt_len,
+                             queued_tokens_ahead) <= slo:
+            return Admission.ADMIT
+        if self.predict_ttft(now, arrival, prompt_len, 0) <= slo:
+            return Admission.QUEUE
+        self.n_rejected += 1
+        return Admission.REJECT

@@ -16,6 +16,13 @@ simulator:
 
 `prefill_plan` / `decode_plan` mutate the policy's cache state and return
 declarative plans the engine executes and the simulator times.
+
+Decode plans accept multi-request selections (paper §V generalized to B>1):
+`decode_plan(layer, selections)` takes either one request's [k] expert ids or
+a sequence of per-request id lists; nested selections are unioned in
+first-appearance order before cache bookkeeping, so a shared DeviceExpertCache
+under continuous batching fetches each distinct expert once per step and the
+hit/miss ledger counts distinct experts, not per-request duplicates.
 """
 from __future__ import annotations
 
@@ -45,6 +52,25 @@ class DecodePlan:
     misses: List[int]         # selected experts needing a blocking fetch
     prefetch_next: List[int]  # experts to prefetch for layer+1 (async)
     predicted: List[int]      # what the policy predicted for THIS layer
+
+
+def union_selection(selected) -> List[int]:
+    """Flatten one request's [k] ids or B requests' [[k], ...] into a
+    duplicate-free list, preserving first-appearance order (request 0's
+    top-1 first). Order stability keeps fetch schedules deterministic."""
+    seen: Set[int] = set()
+    out: List[int] = []
+    stack = list(selected)[::-1]
+    while stack:
+        e = stack.pop()
+        if isinstance(e, (list, tuple, np.ndarray)):
+            stack.extend(list(e)[::-1])
+            continue
+        e = int(e)
+        if e not in seen:
+            seen.add(e)
+            out.append(e)
+    return out
 
 
 class BaseScheduler:
@@ -118,9 +144,10 @@ class ODFScheduler(BaseScheduler):
     name = "odf"
 
     def __init__(self, n_layers, n_experts, top_k, bytes_per_expert,
-                 capacity: Optional[int] = None, stateless: bool = True):
+                 capacity: Optional[int] = None, stateless: bool = True,
+                 batch: int = 1):
         super().__init__(n_layers, n_experts, top_k, bytes_per_expert,
-                         capacity or 2 * top_k)
+                         capacity or 2 * top_k * batch)
         self.stateless = stateless
 
     def prefill_plan(self, layer, active):
@@ -130,6 +157,7 @@ class ODFScheduler(BaseScheduler):
                            prefetch_all_first=False)
 
     def decode_plan(self, layer, selected, features=None):
+        selected = union_selection(selected)
         if self.stateless:
             # accelerate frees offloaded weights after each module forward
             for key in [k for k in self.cache.resident if k[0] != layer]:
@@ -145,7 +173,8 @@ class LFPScheduler(BaseScheduler):
     name = "lfp"
 
     def __init__(self, n_layers, n_experts, top_k, bytes_per_expert,
-                 capacity: Optional[int] = None):
+                 capacity: Optional[int] = None, batch: int = 1):
+        # staging is per-layer (all E experts), independent of batch size
         super().__init__(n_layers, n_experts, top_k, bytes_per_expert,
                          capacity or 2 * n_experts)
 
@@ -156,6 +185,7 @@ class LFPScheduler(BaseScheduler):
                            prefetch_all_first=True)
 
     def decode_plan(self, layer, selected, features=None):
+        selected = union_selection(selected)
         hits, misses = self._split_hits(layer, selected)
         nxt = list(range(self.E)) if layer + 1 < self.L else []
         if nxt:
@@ -172,10 +202,12 @@ class MIFScheduler(BaseScheduler):
     uses_predictor = False
 
     def __init__(self, n_layers, n_experts, top_k, bytes_per_expert,
-                 stats: TraceStats, capacity: Optional[int] = None):
+                 stats: TraceStats, capacity: Optional[int] = None,
+                 batch: int = 1):
         # MoE-Infinity holds a large activation-aware cache (Table II shows
         # its footprint is by far the largest of the compared systems)
-        cap = capacity or max(4 * top_k, int(0.6 * n_layers * n_experts))
+        cap = capacity or max(4 * top_k * batch,
+                              int(0.6 * n_layers * n_experts))
         super().__init__(n_layers, n_experts, top_k, bytes_per_expert, cap)
         self.stats = stats
 
@@ -194,6 +226,7 @@ class MIFScheduler(BaseScheduler):
                            pipelined=False, prefetch_all_first=True)
 
     def decode_plan(self, layer, selected, features=None):
+        selected = union_selection(selected)
         predicted = self._prior(layer)
         hits, misses = self._split_hits(layer, selected)
         self.end_layer(layer)
@@ -221,9 +254,11 @@ class DuoServeScheduler(BaseScheduler):
 
     def __init__(self, n_layers, n_experts, top_k, bytes_per_expert,
                  predictor=None, state_constructor=None,
-                 capacity: Optional[int] = None):
+                 capacity: Optional[int] = None, batch: int = 1):
+        # capacity must cover one batched step's churn: the selected union
+        # (<= batch*k) plus the widened next-layer prefetch (<= batch*k)
         super().__init__(n_layers, n_experts, top_k, bytes_per_expert,
-                         capacity or 2 * top_k)
+                         capacity or 2 * top_k * batch)
         self.predictor = predictor
         self.state_constructor = state_constructor
         self._path: List[np.ndarray] = []
@@ -242,20 +277,26 @@ class DuoServeScheduler(BaseScheduler):
                            overlap_first=True, pipelined=True,
                            prefetch_all_first=False)
 
-    def _predict(self, layer: int) -> List[int]:
+    def _predict(self, layer: int, width: Optional[int] = None) -> List[int]:
         if self.predictor is None or self.state_constructor is None:
             return []
+        width = min(self.E, width or self.k)
         feat = self.state_constructor.features(self._path, layer)
-        top = self.predictor.predict_topk(feat[None])[0]
-        return [int(e) for e in top[: self.k]]
+        top = self.predictor.predict_topk(feat[None], k=width)[0]
+        return [int(e) for e in top[:width]]
 
     def decode_plan(self, layer, selected, features=None):
+        # a batched step needs up to n_req*k distinct experts at layer l+1;
+        # widen the prediction stream accordingly (single request: k).
+        n_req = sum(1 for s in selected
+                    if isinstance(s, (list, tuple, np.ndarray))) or 1
+        selected = union_selection(selected)
         predicted = self._next_prefetched.get(layer, [])
         hits, misses = self._split_hits(layer, selected)
         self._path.append(np.asarray(selected, np.int32))
         nxt = []
         if layer + 1 < self.L:
-            nxt = self._predict(layer + 1)
+            nxt = self._predict(layer + 1, width=n_req * self.k)
             self.end_layer(layer)
             nxt = self._fetch_missing(layer + 1, nxt)
             self._next_prefetched[layer + 1] = nxt
@@ -266,21 +307,25 @@ class DuoServeScheduler(BaseScheduler):
 def make_scheduler(name: str, n_layers: int, n_experts: int, top_k: int,
                    bytes_per_expert: int, *, stats: Optional[TraceStats] = None,
                    predictor=None, state_constructor=None,
-                   capacity: Optional[int] = None) -> BaseScheduler:
+                   capacity: Optional[int] = None,
+                   batch: int = 1) -> BaseScheduler:
+    """batch: max concurrent decode requests the cache must absorb per
+    step (continuous batching); scales the policy default capacities."""
     name = name.lower()
     if name == "odf":
         return ODFScheduler(n_layers, n_experts, top_k, bytes_per_expert,
-                            capacity)
+                            capacity, batch=batch)
     if name == "lfp":
         return LFPScheduler(n_layers, n_experts, top_k, bytes_per_expert,
-                            capacity)
+                            capacity, batch=batch)
     if name == "mif":
         assert stats is not None, "MIF needs TraceStats"
         return MIFScheduler(n_layers, n_experts, top_k, bytes_per_expert,
-                            stats, capacity)
+                            stats, capacity, batch=batch)
     if name in ("duo", "duoserve"):
         return DuoServeScheduler(n_layers, n_experts, top_k, bytes_per_expert,
-                                 predictor, state_constructor, capacity)
+                                 predictor, state_constructor, capacity,
+                                 batch=batch)
     if name in ("duo+", "duo_plus"):
         # Beyond-paper variant (EXPERIMENTS.md §Perf): same dual-phase
         # scheduling, but the decode cache retains hot experts across steps.
@@ -291,7 +336,7 @@ def make_scheduler(name: str, n_layers: int, n_experts: int, top_k: int,
         # Mixtral) at ~half of MIF's footprint.
         return DuoServeScheduler(n_layers, n_experts, top_k, bytes_per_expert,
                                  predictor, state_constructor,
-                                 capacity or max(2 * top_k,
+                                 capacity or max(2 * top_k * batch,
                                                  3 * n_layers * top_k // 2
-                                                 + 2 * top_k))
+                                                 + 2 * top_k * batch))
     raise KeyError(name)

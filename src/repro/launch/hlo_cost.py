@@ -75,7 +75,12 @@ def _shape_bytes_elems(type_str: str) -> Tuple[int, int]:
 
 def _split_operands(rest: str) -> Tuple[List[str], str]:
     """rest starts right after the opening paren of opcode(...). Returns
-    (operand names, attr tail)."""
+    (operand names, attr tail).
+
+    Operands are typed references ("f32[64,128]{1,0} %name"), so the name is
+    extracted by %-token rather than by comma splitting (commas also appear
+    inside shape/layout brackets).
+    """
     depth = 1
     i = 0
     while i < len(rest) and depth:
@@ -85,8 +90,7 @@ def _split_operands(rest: str) -> Tuple[List[str], str]:
             depth -= 1
         i += 1
     inner, tail = rest[: i - 1], rest[i:]
-    ops = [o.strip().lstrip("%") for o in re.split(r",\s*(?=%)", inner)
-           if o.strip().startswith("%")]
+    ops = re.findall(r"%([\w.\-]+)", inner)
     return ops, tail
 
 

@@ -470,6 +470,28 @@ def self_attn_decode(x, p, dims: AttnDims, cache_k, cache_v, slot_pos, slot,
     return o.reshape(B, 1, -1) @ p["wo"], ck, cv
 
 
+def self_attn_decode_batched(x, p, dims: AttnDims, cache_k, cache_v,
+                             slot_pos, slot, pos, *, window=None,
+                             use_rope=True):
+    """One-token decode for B independent sequences at DIFFERENT positions.
+
+    The continuous-batching generalization of `self_attn_decode`: each batch
+    row owns its own ring state, so `slot`/`pos` are [B] vectors and
+    `slot_pos` is [B, W] (already updated to include `pos[b]` at `slot[b]`,
+    -1 = empty). x: [B,1,d]; cache_k/v: [B,W,Hkv,hd].
+    Returns (out, new_k, new_v).
+    """
+    B = x.shape[0]
+    positions = pos.reshape(B, 1)
+    q, k, v = _qkv(x, p, dims, positions, use_rope)
+    rows = jnp.arange(B)
+    ck = cache_k.at[rows, slot].set(k[:, 0])
+    cv = cache_v.at[rows, slot].set(v[:, 0])
+    o = attention(q, ck, cv, q_pos=positions, k_pos=slot_pos,
+                  window=window, causal=True)
+    return o.reshape(B, 1, -1) @ p["wo"], ck, cv
+
+
 def cross_attn_decode(x, p, dims: AttnDims, mem_k, mem_v):
     """Single-token cross attention to cached memory K/V."""
     B = x.shape[0]

@@ -16,8 +16,10 @@ Design (see DESIGN.md §4):
   * Shared experts are fused into one wide SwiGLU whose hidden dim is sharded
     over the model axis; their partial output folds into the same psum.
 
-The capacity path (tokens above capacity dropped) is used for training and
-dry-run lowering. The *serving engine* uses the exact sequential per-expert
+The capacity path (tokens above capacity dropped) is used for sharded
+training and dry-run lowering; single-device calls default to an exact
+capacity of T*k, so prefill/decode/teacher-forced eval never drop and agree
+bit-for-tolerance. The *serving engine* uses the exact sequential per-expert
 path (`expert_ffn_exact`) — that is the paper's own execution model (experts
 run one at a time from a small cache).
 """
@@ -30,6 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro import compat
 from repro.configs.base import ArchConfig
 from repro.models.layers import PDT
 
@@ -201,8 +204,18 @@ def moe_ffn(x, p, cfg: ArchConfig, *, mesh_info=None, capacity_factor=None):
     e_pad = p["w1"].shape[0]
 
     if mesh_info is None:
+        # Single-device dispatch is exact by default: top-k ids are distinct
+        # per token, so no expert can receive more than T assignments and
+        # capacity = T guarantees zero drops. Prefill, decode and teacher-
+        # forced eval therefore agree, and the KV-cache exactness tests hold
+        # for MoE families too. The capacity-bounded path stays available via
+        # an explicit capacity_factor (and is always used under shard_map,
+        # where the buffer bounds per-rank work).
         t_loc = x2d.shape[0]
-        cap = capacity_for(t_loc, cfg, e_pad, capacity_factor)
+        if capacity_factor is None:
+            cap = t_loc
+        else:
+            cap = capacity_for(t_loc, cfg, e_pad, capacity_factor)
         y, aux = moe_ffn_local(x2d, p, cfg, capacity=cap)
         return y.reshape(shp), aux
 
@@ -241,7 +254,7 @@ def moe_ffn(x, p, cfg: ArchConfig, *, mesh_info=None, capacity_factor=None):
         return y.reshape(xl.shape), aux
 
     xspec = P(dp, *([None] * (x.ndim - 1)))
-    out = jax.shard_map(
+    out = compat.shard_map(
         body, mesh=mesh, in_specs=(xspec, wspec),
         out_specs=(xspec, P()), check_vma=False)(x, {k: p[k] for k in wspec})
     return out

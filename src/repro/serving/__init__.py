@@ -1,0 +1,20 @@
+"""DuoServe-MoE serving runtime.
+
+Two front-ends over one execution substrate:
+
+  * ``engine.MoEServingEngine`` — the paper-scope single-request engine
+    (layer-by-layer prefill/decode with the dual-phase expert scheduler).
+  * ``batching.BatchedServingEngine`` — continuous batching for concurrent
+    load: an SLO-aware ``RequestQueue`` admits requests mid-flight, prefill
+    for new arrivals interleaves with one batched decode step per iteration,
+    KV lives in a slot pool with per-request write positions, and each
+    step's per-layer expert selections are unioned across the batch before
+    they reach the shared scheduler + DeviceExpertCache (decode-plan union
+    semantics: one fetch per distinct expert per step, hit/miss accounting
+    over distinct experts).
+
+Both produce ``RequestResult`` records; at temperature 0 they emit identical
+tokens for the same prompt (batched decode is bit-exact per row).
+"""
+from repro.serving.engine import (EngineCore, MoEServingEngine,  # noqa: F401
+                                  RequestResult, collect_traces)

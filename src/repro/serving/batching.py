@@ -1,0 +1,331 @@
+"""Continuous-batching serving front-end (ROADMAP: multi-request QoS).
+
+Generalizes the paper's single-request dual-phase runtime to concurrent
+load, the regime its TTFT/E2E SLO claims actually target:
+
+  * ``RequestQueue`` — arrival queue with SLO-aware admission: predicted
+    TTFT (EWMA cost model, ``core/qos.py``) is checked against each
+    request's deadline; requests whose deadline is already unmeetable are
+    shed instead of poisoning the batch.
+  * ``BatchedServingEngine`` — continuous batching over the layer-by-layer
+    engine core: requests are admitted mid-flight; each scheduler iteration
+    runs prefill for newly admitted arrivals, then ONE batched decode step
+    for every in-flight request. KV lives in a slot pool (one slot per
+    in-flight request, per-request write positions, ring invariant
+    slot == pos % W), so sequences at different positions decode together
+    via ``self_attn_decode_batched``.
+  * Decode-phase expert scheduling is shared: per-step, per-layer expert
+    selections of all B requests are unioned (first-appearance order) and
+    handed to ONE scheduler/DeviceExpertCache pair (paper §V generalized to
+    B>1) — each distinct expert is fetched at most once per step, and the
+    ExpertMLP prediction stream prefetches layer l+1 for the whole batch.
+
+Exactness invariant: every decode-side kernel is row-wise deterministic and
+per-row accumulation follows each request's own top-k order, so at
+temperature 0 a batched step reproduces the single-request engine's tokens
+bit-exactly (tests/test_serving_batch.py).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Deque, Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.qos import Admission, AdmissionController
+from repro.core.scheduler import DuoServeScheduler
+from repro.models.layers import PDT
+from repro.serving.engine import EngineCore, RequestResult
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request moving through the continuous-batching engine."""
+    rid: int
+    prompt: np.ndarray               # [S] int32
+    max_new: int
+    arrival: float
+    ttft_slo: Optional[float] = None
+    temperature: Optional[float] = None   # None = engine default
+    # runtime state ---------------------------------------------------------
+    state: str = "queued"            # queued|running|done|rejected
+    slot: int = -1
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    prefill_active: List[List[int]] = dataclasses.field(default_factory=list)
+    trace: List[np.ndarray] = dataclasses.field(default_factory=list)
+    pred: List[np.ndarray] = dataclasses.field(default_factory=list)
+    hits: int = 0
+    misses: int = 0
+    t_start: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
+    rng: Optional[np.random.Generator] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def pos(self) -> int:
+        """Absolute position of the NEXT token to decode."""
+        return self.prompt_len + len(self.tokens) - 1
+
+    @property
+    def done(self) -> bool:
+        return len(self.tokens) >= self.max_new + 1  # first token + max_new
+
+    def result(self) -> RequestResult:
+        T = len(self.trace)
+        L_k = self.trace[0].shape if T else (0, 0)
+        return RequestResult(
+            tokens=np.asarray(self.tokens, np.int64),
+            prefill_active=self.prefill_active,
+            decode_trace=(np.stack(self.trace) if T
+                          else np.zeros((0,) + L_k, np.int32)),
+            pred_trace=(np.stack(self.pred) if T
+                        else np.zeros((0,) + L_k, np.int32)),
+            ttft_wall=self.t_first - self.arrival,
+            e2e_wall=self.t_done - self.arrival,
+            hits=self.hits, misses=self.misses)
+
+
+class RequestQueue:
+    """FIFO arrival queue with SLO-aware admission (core/qos.py).
+
+    `pop_admissible` hands back up to `limit` requests whose predicted TTFT
+    fits their deadline; breached requests are shed (state='rejected') so a
+    doomed prompt never occupies a KV slot another request could meet its
+    SLO with.
+    """
+
+    def __init__(self, admission: Optional[AdmissionController] = None):
+        self.admission = admission or AdmissionController()
+        self.pending: Deque[Request] = collections.deque()
+        self.rejected: List[Request] = []
+
+    def __len__(self) -> int:
+        return len(self.pending)
+
+    def submit(self, req: Request) -> None:
+        self.pending.append(req)
+
+    def queued_tokens(self) -> int:
+        return sum(r.prompt_len for r in self.pending)
+
+    def pop_admissible(self, now: float, limit: int) -> List[Request]:
+        out: List[Request] = []
+        ahead = 0
+        while self.pending and len(out) < limit:
+            req = self.pending[0]
+            verdict = self.admission.decide(
+                now, req.arrival, req.prompt_len, ahead, req.ttft_slo)
+            if verdict is Admission.QUEUE:
+                # deadline still reachable once the backlog drains: keep the
+                # request at the head (FIFO) and stop admitting this round
+                break
+            self.pending.popleft()
+            if verdict is Admission.REJECT:
+                req.state = "rejected"
+                self.rejected.append(req)
+                continue
+            ahead += req.prompt_len
+            out.append(req)
+        return out
+
+
+class BatchedServingEngine(EngineCore):
+    """Continuous-batching engine: slot-pool KV + shared expert scheduling.
+
+    max_batch: concurrent in-flight requests (= KV slots).
+    max_seq:   per-slot KV capacity W (prompt + generated tokens must fit).
+    """
+
+    def __init__(self, cfg, params, policy: str = "duo", *,
+                 max_batch: int = 4, max_seq: int = 128,
+                 queue: Optional[RequestQueue] = None,
+                 stats=None, predictor=None, cache_capacity=None,
+                 temperature: float = 0.0, sample_seed: int = 0):
+        super().__init__(cfg, params, policy, stats=stats,
+                         predictor=predictor, cache_capacity=cache_capacity,
+                         temperature=temperature, sample_seed=sample_seed,
+                         sched_batch=max_batch)
+        self.max_batch = max_batch
+        self.W = max_seq
+        self.queue = RequestQueue() if queue is None else queue
+        self.sample_seed = sample_seed
+        hkv, hd = cfg.n_kv_heads, cfg.hd
+        self._K = [jnp.zeros((max_batch, max_seq, hkv, hd), PDT)
+                   for _ in range(self.L)]
+        self._V = [jnp.zeros_like(self._K[l]) for l in range(self.L)]
+        self._slot_pos = np.full((max_batch, max_seq), -1, np.int32)
+        self._free: List[int] = list(range(max_batch))[::-1]
+        self.running: List[Request] = []
+        self.finished: List[Request] = []
+        self._next_rid = 0
+        self.step_count = 0
+        self.decode_batch_hist: List[int] = []
+
+    # -- submission ---------------------------------------------------------
+    def submit(self, prompt: np.ndarray, max_new: int = 16, *,
+               arrival: Optional[float] = None,
+               ttft_slo: Optional[float] = None,
+               temperature: Optional[float] = None) -> Request:
+        req = Request(rid=self._next_rid,
+                      prompt=np.asarray(prompt, np.int32).reshape(-1),
+                      max_new=max_new,
+                      arrival=(time.perf_counter() if arrival is None
+                               else arrival),
+                      ttft_slo=ttft_slo, temperature=temperature)
+        req.rng = np.random.default_rng(self.sample_seed + req.rid)
+        assert req.prompt_len + max_new + 1 <= self.W, \
+            f"request needs {req.prompt_len + max_new + 1} slots > W={self.W}"
+        self._next_rid += 1
+        self.queue.submit(req)
+        return req
+
+    # -- prefill phase ------------------------------------------------------
+    def _admit_and_prefill(self, now: float) -> List[Request]:
+        newly = self.queue.pop_admissible(now, limit=len(self._free))
+        for req in newly:
+            slot = self._free.pop()
+            req.slot = slot
+            req.state = "running"
+            req.t_start = now
+            t0 = time.perf_counter()
+            logits, (kc, vc), active, _ = self.prefill_layers(
+                req.prompt.reshape(1, -1))
+            S = req.prompt_len
+            for l in range(self.L):
+                self._K[l] = self._K[l].at[slot, :S].set(kc[l][0])
+                self._V[l] = self._V[l].at[slot, :S].set(vc[l][0])
+            self._slot_pos[slot, :] = -1
+            self._slot_pos[slot, :S] = np.arange(S, dtype=np.int32)
+            req.prefill_active = active
+            req.tokens.append(self._sample_req(req, logits[0]))
+            req.t_first = time.perf_counter()
+            self.queue.admission.model.observe_prefill(S, req.t_first - t0)
+            self.running.append(req)
+        return newly
+
+    def _sample_req(self, req: Request, logits_row) -> int:
+        temp = (self.temperature if req.temperature is None
+                else req.temperature)
+        return self.sample_row(np.asarray(logits_row, np.float64), temp,
+                               req.rng)
+
+    # -- decode phase -------------------------------------------------------
+    def _decode_step(self, batch: List[Request]) -> None:
+        """One batched decode step: every request advances by one token.
+
+        Per-row accumulation follows each request's own top-k order, so the
+        result is bit-identical to B independent single-request steps.
+        """
+        B = len(batch)
+        t0 = time.perf_counter()
+        idx = np.asarray([r.slot for r in batch], np.int32)
+        toks = np.asarray([[r.tokens[-1]] for r in batch], np.int32)
+        pos_np = np.asarray([r.pos for r in batch], np.int32)
+        slot_np = pos_np % self.W
+        rows = np.arange(B)
+        for b in range(B):
+            self._slot_pos[idx[b], slot_np[b]] = pos_np[b]
+        sp = jnp.asarray(self._slot_pos[idx])
+        pos = jnp.asarray(pos_np)
+        slot = jnp.asarray(slot_np)
+        jidx = jnp.asarray(idx)
+
+        x = self.dev["embed"].at[jnp.asarray(toks)].get(mode="clip")
+        if isinstance(self.sched, DuoServeScheduler):
+            self.sched.begin_decode_step()
+        step_trace = np.zeros((B, self.L, self.k), np.int32)
+        step_pred = np.full((B, self.L, self.k), -1, np.int32)
+        for l in range(self.L):
+            lp = self._layer(l)
+            ck = self._K[l][jidx]
+            cv = self._V[l][jidx]
+            x, ck, cv = self._attn_decode_batched(lp, x, ck, cv, sp, slot,
+                                                  pos)
+            self._K[l] = self._K[l].at[jidx].set(ck)
+            self._V[l] = self._V[l].at[jidx].set(cv)
+            xn, w, ids = self._gate(self._moe_dev(l), lp, x)
+            ids_np = np.asarray(ids).reshape(B, self.k)
+            step_trace[:, l] = ids_np
+            selections = [list(map(int, ids_np[b])) for b in range(B)]
+            plan = self.sched.decode_plan(l, selections)
+            # hits + misses together cover exactly the distinct selections
+            union = plan.hits + plan.misses
+            np_pred = plan.predicted[: self.k]
+            step_pred[:, l, : len(np_pred)] = np_pred
+            # correction fetches for misses (sync point #1), once per expert
+            for e in plan.misses:
+                self.cache.prefetch((l, e))
+                self.cache.wait((l, e))
+            hit_set, miss_set = set(plan.hits), set(plan.misses)
+            for b, r in enumerate(batch):
+                r.hits += len(set(selections[b]) & hit_set)
+                r.misses += len(set(selections[b]) & miss_set)
+            # one pre-gate output per DISTINCT expert across the batch
+            raw: Dict[int, jnp.ndarray] = {}
+            for e in union:
+                w1, w3, w2 = self.cache.get((l, e))
+                raw[e] = self._expert_raw(xn, w1, w3, w2)  # f32 [B, d]
+            acc = self._shared(self._moe_dev(l), xn)
+            if union:
+                stacked = jnp.stack([raw[e] for e in union])  # [U, B, d]
+                inv = np.zeros(self.E, np.int32)
+                for u, e in enumerate(union):
+                    inv[e] = u
+                for j in range(self.k):
+                    # j-th choice of every row, in that row's own top-k order
+                    y = stacked[jnp.asarray(inv[ids_np[:, j]]), rows]
+                    acc = acc + (y * w[:, j, None]).astype(acc.dtype)
+            x = x + acc.reshape(x.shape)
+            # prediction stream: prefetch layer l+1's experts for the batch
+            for e in plan.prefetch_next:
+                self.cache.prefetch((l + 1, e))
+        logits = self._head(self.dev["ln_f"], self.dev["embed"], x[:, -1])
+        lg_np = np.asarray(logits, np.float64)
+        t_tok = time.perf_counter()
+        for b, r in enumerate(batch):
+            r.tokens.append(self._sample_req(r, lg_np[b]))
+            r.trace.append(step_trace[b])
+            r.pred.append(step_pred[b])
+        self.queue.admission.model.observe_decode_step(t_tok - t0)
+        self.decode_batch_hist.append(B)
+
+    # -- scheduler loop -----------------------------------------------------
+    def step(self, now: Optional[float] = None) -> bool:
+        """One engine iteration: admit + prefill new arrivals, then one
+        batched decode step for all in-flight requests. Returns True if any
+        work was done."""
+        now = time.perf_counter() if now is None else now
+        admitted = self._admit_and_prefill(now)
+        batch = [r for r in self.running if not r.done]
+        if batch:
+            self._decode_step(batch)
+        did_work = bool(admitted or batch)
+        self.step_count += 1
+        # retire finished requests, free their slots
+        still = []
+        for r in self.running:
+            if r.done:
+                r.state = "done"
+                r.t_done = time.perf_counter()
+                self._slot_pos[r.slot, :] = -1
+                self._free.append(r.slot)
+                self.finished.append(r)
+            else:
+                still.append(r)
+        self.running = still
+        return did_work
+
+    def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
+        """Drive step() until queue + running set are empty."""
+        for _ in range(max_steps):
+            self.step()
+            if not self.running and not len(self.queue):
+                break
+        return self.finished

@@ -16,6 +16,16 @@ Routed-expert weights live ONLY in the HostExpertStore (host RAM); the device
 holds non-MoE weights + a k-slot expert cache — the paper's memory model.
 The engine records routing traces + cache events; the simulator replays them
 with hardware constants to produce the paper's latency/memory tables.
+
+The module is split into:
+
+  * ``EngineCore`` — the shared execution substrate (host store, device
+    residency split, jitted per-layer kernels, scheduler + device cache).
+    Kernels are written batch-agnostic: every decode-side op is row-wise
+    deterministic, so a [B,1,d] batched step reproduces B independent
+    [1,1,d] steps bit-exactly (the invariant the continuous-batching
+    front-end in ``serving/batching.py`` is built on).
+  * ``MoEServingEngine`` — the paper-scope single-request engine.
 """
 from __future__ import annotations
 
@@ -51,13 +61,20 @@ class RequestResult:
     misses: int
 
 
-class MoEServingEngine:
-    """Single-request engine for dense-family MoE configs (paper scope)."""
+class EngineCore:
+    """Shared serving substrate for dense-family MoE configs.
+
+    Owns the host expert store, the device-resident non-expert weights, the
+    jitted per-layer kernels, and one scheduler + device expert cache pair.
+    Subclasses add a request-execution discipline on top (single-request
+    serve() here; continuous batching in serving/batching.py).
+    """
 
     def __init__(self, cfg: ArchConfig, params, policy: str = "duo", *,
                  stats: Optional[TraceStats] = None, predictor=None,
                  cache_capacity: Optional[int] = None,
-                 temperature: float = 0.8, sample_seed: int = 0):
+                 temperature: float = 0.8, sample_seed: int = 0,
+                 sched_batch: int = 1):
         assert cfg.is_moe and cfg.family in ("moe", "dense"), \
             "engine schedules experts; use bundle.decode for non-MoE archs"
         assert cfg.n_dense_layers == 0, "engine assumes uniform MoE stack"
@@ -83,10 +100,9 @@ class MoEServingEngine:
         self.sched = make_scheduler(
             policy, self.L, self.E, self.k, self.store.bytes_per_expert,
             stats=stats, predictor=predictor, state_constructor=sc,
-            capacity=cache_capacity)
+            capacity=cache_capacity, batch=sched_batch)
         self.cache = DeviceExpertCache(
             self.store, capacity=self.sched.cache.capacity)
-        # mirror residency decisions into the device cache
         self._jit_fns()
 
     # -- jitted per-layer kernels (compiled once; reused for every layer) ----
@@ -109,6 +125,13 @@ class MoEServingEngine:
             return x + h, ck, cv
 
         @jax.jit
+        def attn_decode_batched(lp, x, ck, cv, sp, slot, pos):
+            h, ck, cv = L.self_attn_decode_batched(
+                L.rms_norm(x, lp["ln1"], eps), lp["attn"], dims,
+                ck, cv, sp, slot, pos)
+            return x + h, ck, cv
+
+        @jax.jit
         def gate(moe_dev, lp, x):
             xn = L.rms_norm(x, lp["ln2"], eps)
             x2 = xn.reshape(-1, xn.shape[-1])
@@ -116,10 +139,15 @@ class MoEServingEngine:
             return xn, w, ids
 
         @jax.jit
-        def expert_apply(xn, w1, w3, w2, gate_w):
+        def expert_raw(xn, w1, w3, w2):
+            """Pre-gate expert output in f32: [T, d]."""
             x2 = xn.reshape(-1, xn.shape[-1])
             h = jax.nn.silu(x2 @ w1) * (x2 @ w3)
-            return ((h @ w2).astype(jnp.float32)
+            return (h @ w2).astype(jnp.float32)
+
+        @jax.jit
+        def expert_apply(xn, w1, w3, w2, gate_w):
+            return (expert_raw(xn, w1, w3, w2)
                     * gate_w[:, None]).astype(xn.dtype)
 
         @jax.jit
@@ -139,7 +167,9 @@ class MoEServingEngine:
 
         self._attn_prefill = attn_prefill
         self._attn_decode = attn_decode
+        self._attn_decode_batched = attn_decode_batched
         self._gate = gate
+        self._expert_raw = expert_raw
         self._expert = expert_apply
         self._shared = shared_apply
         self._head = head
@@ -153,7 +183,6 @@ class MoEServingEngine:
     def _run_experts_prefill(self, l, xn, w, ids, plan):
         """Execute the PrefillPlan: grouped per-expert compute with the
         policy's fetch schedule (async device_put between dispatches)."""
-        T = xn.shape[0] * xn.shape[1]
         acc = self._shared(self._moe_dev(l), xn)
         order = plan.order
         # stage fetches according to the plan
@@ -174,9 +203,13 @@ class MoEServingEngine:
             acc = acc + self._expert(xn, w1, w3, w2, gate_w)
         return acc.reshape(xn.shape)
 
-    def prefill(self, tokens: np.ndarray):
-        """tokens: [1, S]. Returns (next_token, kv_caches, active_per_layer,
-        per-token paths [S? no — per-prompt prefill paths not tracked])."""
+    def prefill_layers(self, tokens: np.ndarray):
+        """Run the layer-by-layer prefill pipeline on tokens [1, S].
+
+        Returns (last_logits [1, Vp], (kc, vc), active_per_layer,
+        per-token paths [S, L, k]). Sampling is left to the caller so both
+        the single-request and the batched front-end can share this path.
+        """
         x = self.dev["embed"].at[jnp.asarray(tokens)].get(mode="clip")
         S = tokens.shape[1]
         kc, vc = [], []
@@ -197,17 +230,33 @@ class MoEServingEngine:
             self.sched.end_layer(l)
             active.append(act)
         logits = self._head(self.dev["ln_f"], self.dev["embed"], x[:, -1])
-        return self._sample(logits), (kc, vc), active, paths
+        return logits, (kc, vc), active, paths
 
     def _sample(self, logits) -> int:
-        lg = np.asarray(logits, np.float64)[0]
-        if self.temperature <= 0:
+        return self.sample_row(np.asarray(logits, np.float64)[0],
+                               self.temperature, self._rng)
+
+    @staticmethod
+    def sample_row(lg: np.ndarray, temperature: float, rng) -> int:
+        """Sample one token id from a f64 logits row (greedy at temp<=0)."""
+        if temperature <= 0:
             return int(lg.argmax())
-        lg = lg / self.temperature
-        lg -= lg.max()
+        lg = lg / temperature
+        lg = lg - lg.max()
         p = np.exp(lg)
         p /= p.sum()
-        return int(self._rng.choice(len(p), p=p))
+        return int(rng.choice(len(p), p=p))
+
+
+class MoEServingEngine(EngineCore):
+    """Single-request engine (paper scope): one prompt at a time, KV cache
+    private to the request, decode loop runs the full dual-phase schedule."""
+
+    def prefill(self, tokens: np.ndarray):
+        """tokens: [1, S]. Returns (next_token, kv_caches, active_per_layer,
+        per-token paths [S, L, k])."""
+        logits, kv, active, paths = self.prefill_layers(tokens)
+        return self._sample(logits), kv, active, paths
 
     def decode(self, first_token: int, kv, prompt_len: int, max_new: int):
         kc, vc = kv

@@ -1,0 +1,164 @@
+"""Continuous-batching correctness: batched decode must be bit-exact vs the
+single-request engine at temperature 0, and the shared-cache ledger must
+count distinct experts per step (decode-plan union semantics)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config, reduced
+from repro.core.qos import (Admission, AdmissionController, LatencyModel)
+from repro.core.scheduler import union_selection
+from repro.models.model import build
+from repro.serving.batching import BatchedServingEngine, RequestQueue
+from repro.serving.engine import MoEServingEngine
+
+MAX_NEW = 4
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_config("mixtral_8x7b"))
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+               for n in (12, 16, 9, 14)]
+    seq = MoEServingEngine(cfg, params, policy="duo", temperature=0.0)
+    refs = [seq.serve(p, max_new=MAX_NEW) for p in prompts]
+    return cfg, params, prompts, refs
+
+
+@pytest.mark.parametrize("B", [1, 2, 4])
+def test_batched_matches_sequential(setup, B):
+    """B concurrent requests produce exactly the tokens B sequential
+    single-request serve() calls produce (greedy)."""
+    cfg, params, prompts, refs = setup
+    eng = BatchedServingEngine(cfg, params, policy="duo", max_batch=B,
+                               max_seq=32, temperature=0.0)
+    for p in prompts[:B]:
+        eng.submit(p, max_new=MAX_NEW)
+    finished = sorted(eng.run_until_drained(), key=lambda r: r.rid)
+    assert len(finished) == B
+    assert len(eng.decode_batch_hist) == MAX_NEW
+    assert max(eng.decode_batch_hist) == B
+    for i, r in enumerate(finished):
+        np.testing.assert_array_equal(r.result().tokens, refs[i].tokens,
+                                      err_msg=f"request {i} diverged")
+
+
+def test_midflight_admission_matches_sequential(setup):
+    """More requests than KV slots: later arrivals are admitted as slots
+    free up mid-flight, still bit-exact."""
+    cfg, params, prompts, refs = setup
+    eng = BatchedServingEngine(cfg, params, policy="duo", max_batch=2,
+                               max_seq=32, temperature=0.0)
+    for p in prompts:
+        eng.submit(p, max_new=MAX_NEW)
+    finished = sorted(eng.run_until_drained(), key=lambda r: r.rid)
+    assert len(finished) == len(prompts)
+    for i, r in enumerate(finished):
+        np.testing.assert_array_equal(r.result().tokens, refs[i].tokens)
+
+
+@pytest.mark.parametrize("policy", ["odf", "lfp", "duo", "duo+"])
+def test_policies_identical_tokens_batched(setup, policy):
+    """Scheduling policy must never change batched outputs either."""
+    cfg, params, prompts, refs = setup
+    eng = BatchedServingEngine(cfg, params, policy=policy, max_batch=2,
+                               max_seq=32, temperature=0.0)
+    for p in prompts[:2]:
+        eng.submit(p, max_new=MAX_NEW)
+    finished = sorted(eng.run_until_drained(), key=lambda r: r.rid)
+    for i, r in enumerate(finished):
+        np.testing.assert_array_equal(r.result().tokens, refs[i].tokens,
+                                      err_msg=f"{policy} diverged")
+
+
+def test_shared_cache_accounting(setup):
+    """Per step+layer the scheduler ledger counts each DISTINCT selected
+    expert exactly once; per request every selected expert lands in exactly
+    one of {hits, misses}."""
+    cfg, params, prompts, _ = setup
+    B = 4
+    eng = BatchedServingEngine(cfg, params, policy="duo", max_batch=B,
+                               max_seq=32, temperature=0.0)
+    for p in prompts[:B]:
+        eng.submit(p, max_new=MAX_NEW)
+    finished = sorted(eng.run_until_drained(), key=lambda r: r.rid)
+
+    traces = [r.result().decode_trace for r in finished]  # [T, L, k] each
+    expected = 0
+    for t in range(MAX_NEW):
+        for l in range(cfg.n_layers):
+            union = set()
+            for tr in traces:
+                union.update(int(e) for e in tr[t, l])
+            expected += len(union)
+    assert eng.sched.decode_hits + eng.sched.decode_misses == expected
+    # per-request attribution covers exactly its own selections
+    for r in finished:
+        assert r.hits + r.misses == MAX_NEW * cfg.n_layers * cfg.top_k
+    # attribution can only multiply-count shared experts, never lose them
+    assert sum(r.hits + r.misses for r in finished) >= expected
+    # the batch-scaled cache capacity absorbs one step's churn without the
+    # everything-pinned overflow branch silently growing the cache
+    assert eng.sched.cache.capacity >= 2 * B * cfg.top_k
+    assert eng.sched.cache.peak_resident <= eng.sched.cache.capacity
+
+
+def test_union_selection_shapes():
+    assert union_selection([3, 1, 2]) == [3, 1, 2]
+    assert union_selection([[3, 1], [1, 2]]) == [3, 1, 2]
+    assert union_selection([np.array([5, 0]), [0, 5]]) == [5, 0]
+    assert union_selection([]) == []
+
+
+def test_admission_queue_verdict_keeps_fifo():
+    """Backlog-only breach -> QUEUE: the request stays at the head instead
+    of being shed, and admission stops for the round (FIFO preserved)."""
+    from repro.serving.batching import Request
+    ctl = AdmissionController(
+        LatencyModel(prefill_per_token=0.1, decode_step=0.0),
+        default_ttft_slo=2.0)
+    assert ctl.decide(0.0, 0.0, 16, 0) is Admission.ADMIT
+    assert ctl.decide(0.0, 0.0, 16, 16) is Admission.QUEUE   # backlog breach
+    assert ctl.decide(0.0, 0.0, 40, 0) is Admission.REJECT   # hopeless
+
+    q = RequestQueue(ctl)
+    r0 = Request(rid=0, prompt=np.zeros(16, np.int32), max_new=2, arrival=0.0)
+    r1 = Request(rid=1, prompt=np.zeros(16, np.int32), max_new=2, arrival=0.0)
+    q.submit(r0)
+    q.submit(r1)
+    admitted = q.pop_admissible(now=0.0, limit=2)
+    assert [r.rid for r in admitted] == [0]
+    assert len(q.pending) == 1 and q.pending[0].rid == 1
+    assert not q.rejected
+    # backlog drained -> the queued request admits on the next round
+    assert [r.rid for r in q.pop_admissible(now=0.0, limit=2)] == [1]
+
+
+def test_admission_controller_slo():
+    slow = AdmissionController(LatencyModel(prefill_per_token=1.0),
+                               default_ttft_slo=0.5)
+    assert slow.decide(0.0, 0.0, 10, 0) is Admission.REJECT
+    assert slow.n_rejected == 1
+    fast = AdmissionController(LatencyModel(prefill_per_token=1e-6))
+    # no SLO -> always admit
+    assert fast.decide(0.0, 0.0, 10, 0) is Admission.ADMIT
+    assert fast.decide(0.0, 0.0, 10, 10**6, ttft_slo=30.0) is Admission.ADMIT
+
+
+def test_queue_sheds_breached_requests(setup):
+    """A pessimistic cost model + tight deadline: the queue rejects instead
+    of wasting a KV slot on an unmeetable request."""
+    cfg, params, prompts, _ = setup
+    queue = RequestQueue(AdmissionController(
+        LatencyModel(prefill_per_token=100.0), default_ttft_slo=0.1))
+    eng = BatchedServingEngine(cfg, params, policy="duo", max_batch=2,
+                               max_seq=32, queue=queue, temperature=0.0)
+    eng.submit(prompts[0], max_new=2)
+    eng.submit(prompts[1], max_new=2, ttft_slo=1e6)  # generous deadline
+    finished = eng.run_until_drained(max_steps=20)
+    assert len(queue.rejected) == 1
+    assert queue.rejected[0].state == "rejected"
+    assert len(finished) == 1 and finished[0].rid == 1
