@@ -31,7 +31,8 @@ RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
 
 
 def run_load(cfg, params, prompts, *, rate: float, max_new: int,
-             max_batch: int, policy: str, ttft_slo, seed: int = 0) -> dict:
+             max_batch: int, policy: str, ttft_slo, seed: int = 0,
+             prefill_budget=None) -> dict:
     """Offer `prompts` at Poisson rate `rate` req/s; drain; summarize."""
     rng = np.random.default_rng(seed)
     inter = rng.exponential(1.0 / rate, size=len(prompts))
@@ -43,9 +44,10 @@ def run_load(cfg, params, prompts, *, rate: float, max_new: int,
                                max_batch=max_batch,
                                max_seq=max(len(p) for p in prompts)
                                + max_new + 2,
+                               prefill_budget=prefill_budget,
                                queue=queue, temperature=0.0)
     pending = list(zip(arrivals, prompts))
-    while pending or len(eng.queue) or eng.running:
+    while pending or len(eng.queue) or eng.prefilling or eng.running:
         now = time.perf_counter()
         while pending and pending[0][0] <= now:
             arr, p = pending.pop(0)
@@ -88,6 +90,8 @@ def main():
     ap.add_argument("--policy", default="duo+")
     ap.add_argument("--ttft-slo", type=float, default=None,
                     help="seconds; requests predicted to breach are shed")
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    help="chunked prefill tokens per step (None=monolithic)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -104,7 +108,8 @@ def main():
     for rate in [float(r) for r in args.rates.split(",")]:
         rec = run_load(cfg, params, prompts, rate=rate,
                        max_new=args.max_new, max_batch=args.max_batch,
-                       policy=args.policy, ttft_slo=args.ttft_slo)
+                       policy=args.policy, ttft_slo=args.ttft_slo,
+                       prefill_budget=args.prefill_budget)
         records.append(rec)
         print(f"{rate:6.2f} {rec['completed']:5d} {rec['rejected']:5d} "
               f"{rec['ttft']['p50']:8.2f}s {rec['ttft']['p99']:8.2f}s "

@@ -1,0 +1,134 @@
+"""Inter-token stall benchmark: chunked vs monolithic prefill (DUO engine).
+
+The paper's phase-disparity argument says a uniform prefill policy inflates
+tail latency for everyone else; the sharpest symptom in a continuous-batching
+engine is the inter-token gap (TBT) of in-flight decoders while a long prompt
+prefills. Monolithic prefill freezes every decoder for the full prefill wall
+time; chunked prefill (``prefill_budget``) bounds the freeze to one chunk +
+one batched decode step.
+
+Protocol: N short-prompt decoders are submitted and warmed into steady-state
+decode; one sacrificial long prompt is driven through first so both modes'
+prefill kernels are compiled outside the measurement window; then the gap
+ledger position is snapshotted and the measured long prompts arrive. We
+report p50/p99/max inter-token gap over the decoders' tokens plus the long
+prompts' TTFT, for monolithic (prefill_budget=None) vs chunked runs of the
+same workload.
+
+  PYTHONPATH=src python benchmarks/bench_stall.py \
+      --budgets 4,8 --long-len 48 --n-long 2 [--policy duo]
+"""
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_config, reduced
+from repro.core.qos import TBTLedger, percentile_report
+from repro.models.model import build
+from repro.serving.batching import BatchedServingEngine
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+
+
+def run_stall(cfg, params, *, policy: str, prefill_budget, n_decoders: int,
+              decoder_len: int, long_len: int, n_long: int,
+              warm_steps: int, seed: int = 0) -> dict:
+    """One workload pass; returns decoder-gap percentiles + long TTFTs."""
+    rng = np.random.default_rng(seed)
+    max_new = warm_steps + (n_long + 1) * (long_len + 4) + 12
+    eng = BatchedServingEngine(
+        cfg, params, policy=policy, max_batch=n_decoders + n_long + 1,
+        max_seq=long_len + max_new + 2, prefill_budget=prefill_budget,
+        temperature=0.0)
+    decoders = [eng.submit(rng.integers(0, cfg.vocab, size=decoder_len)
+                           .astype(np.int32), max_new=max_new)
+                for _ in range(n_decoders)]
+    for _ in range(warm_steps):
+        eng.step()
+    # sacrificial long prompt: compiles the (monolithic or chunked) prefill
+    # kernels for long_len OUTSIDE the measurement window
+    warm_long = eng.submit(rng.integers(0, cfg.vocab, size=long_len)
+                           .astype(np.int32), max_new=2)
+    while not warm_long.done:
+        eng.step()
+    assert all(r.state == "running" for r in decoders), \
+        "decoders must be in steady-state decode before the long arrivals"
+    # snapshot ledger position (NOT a reset: per-request baselines survive,
+    # so the stall step itself still yields a gap sample)
+    mark = {r.rid: len(eng.tbt.by_rid.get(r.rid, [])) for r in decoders}
+
+    longs = [eng.submit(rng.integers(0, cfg.vocab, size=long_len)
+                        .astype(np.int32), max_new=2)
+             for _ in range(n_long)]
+    while any(not r.done for r in longs):
+        eng.step()
+    for _ in range(2):  # a couple of post-storm decode steps
+        eng.step()
+
+    gaps = [g for r in decoders
+            for g in eng.tbt.by_rid.get(r.rid, [])[mark[r.rid]:]]
+    rep = percentile_report(gaps)
+    rep["max"] = max(gaps) if gaps else float("nan")
+    return {
+        "mode": ("monolithic" if prefill_budget is None
+                 else f"chunked[{prefill_budget}]"),
+        "policy": policy,
+        "decoder_gap": rep,
+        "n_gaps": len(gaps),
+        "long_ttft": [r.t_first - r.arrival for r in longs],
+        "steps": eng.step_count,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--policy", default="duo")
+    ap.add_argument("--budgets", default="4,8",
+                    help="comma list of chunk budgets (tokens/step)")
+    ap.add_argument("--decoders", type=int, default=2)
+    ap.add_argument("--decoder-len", type=int, default=8)
+    ap.add_argument("--long-len", type=int, default=48)
+    ap.add_argument("--n-long", type=int, default=2)
+    ap.add_argument("--warm-steps", type=int, default=6)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch))
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+
+    budgets = [None] + [int(b) for b in args.budgets.split(",")]
+    print(f"{'mode':>14s} {'gap_p50':>9s} {'gap_p99':>9s} {'gap_max':>9s} "
+          f"{'ttft_long':>10s}")
+    records = []
+    for budget in budgets:
+        rec = run_stall(cfg, params, policy=args.policy,
+                        prefill_budget=budget, n_decoders=args.decoders,
+                        decoder_len=args.decoder_len, long_len=args.long_len,
+                        n_long=args.n_long, warm_steps=args.warm_steps)
+        records.append(rec)
+        g = rec["decoder_gap"]
+        print(f"{rec['mode']:>14s} {g['p50']*1e3:8.1f}m {g['p99']*1e3:8.1f}m "
+              f"{g['max']*1e3:8.1f}m {np.mean(rec['long_ttft']):9.2f}s")
+
+    mono = records[0]["decoder_gap"]["max"]
+    for rec in records[1:]:
+        verdict = "LOWER" if rec["decoder_gap"]["max"] < mono else "NOT lower"
+        print(f"{rec['mode']}: max gap {verdict} than monolithic "
+              f"({rec['decoder_gap']['max']*1e3:.1f}ms vs {mono*1e3:.1f}ms)")
+
+    out = args.out
+    if out is None:
+        os.makedirs(RESULTS, exist_ok=True)
+        out = os.path.join(RESULTS, "stall.json")
+    with open(out, "w") as f:
+        json.dump(records, f, indent=1)
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -25,6 +25,9 @@ def main():
     ap.add_argument("--max-new", type=int, default=5)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--policy", default="duo+")
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    help="prompt tokens of chunked prefill per engine step "
+                         "(stall-free interleaving); default monolithic")
     args = ap.parse_args()
 
     cfg = reduced(get_config(args.arch))
@@ -42,6 +45,7 @@ def main():
     # continuous batching: all requests in flight, one shared expert cache
     eng = BatchedServingEngine(cfg, params, policy=args.policy,
                                max_batch=args.max_batch, max_seq=64,
+                               prefill_budget=args.prefill_budget,
                                temperature=0.0)
     t0 = time.perf_counter()
     for p in prompts:

@@ -7,23 +7,41 @@ shard_map call sites import from here instead of touching ``jax`` directly.
 """
 from __future__ import annotations
 
+import inspect
 from typing import Optional
 
 import jax
+
+
+def _check_kwarg_name(fn) -> Optional[str]:
+    """Which replication-check kwarg `fn` accepts (there were releases where
+    ``jax.shard_map`` was public but still took ``check_rep``, so the kwarg
+    name cannot be keyed on where the function lives)."""
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):  # opaque wrapper: leave library default
+        return None
+    for name in ("check_vma", "check_rep"):
+        if name in params:
+            return name
+    return None
 
 
 def shard_map(f, *, mesh, in_specs, out_specs,
               check_vma: Optional[bool] = None):
     """``jax.shard_map`` when available, else the experimental fallback.
 
-    check_vma follows the new-API name; on old JAX it maps to ``check_rep``.
-    None leaves the library default in place on either version.
+    check_vma follows the new-API name; on JAX versions whose shard_map
+    still takes ``check_rep`` the value is passed under that name. None (or
+    an inspectable kwarg not being found) leaves the library default.
     """
     if hasattr(jax, "shard_map"):
-        kwargs = {} if check_vma is None else {"check_vma": check_vma}
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, **kwargs)
-    from jax.experimental.shard_map import shard_map as _shard_map
-    kwargs = {} if check_vma is None else {"check_rep": check_vma}
-    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                      **kwargs)
+        fn = jax.shard_map
+    else:
+        from jax.experimental.shard_map import shard_map as fn
+    kwargs = {}
+    if check_vma is not None:
+        name = _check_kwarg_name(fn)
+        if name is not None:
+            kwargs[name] = check_vma
+    return fn(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)

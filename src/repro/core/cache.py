@@ -62,6 +62,11 @@ class CacheState:
     capacity: max resident experts (global across layers). Eviction is LRU
     among non-pinned entries; `pin`/`unpin` protect experts between prefetch
     and use (the paper's sync-point semantics).
+
+    Invariant (tests/test_property.py): residency exceeds capacity ONLY
+    while every resident entry is pinned — pinned must-have admissions may
+    grow an all-pinned cache, speculative (unpinned) ones are declined, and
+    unpinning shrinks an over-grown cache back to capacity.
     """
 
     def __init__(self, capacity: int, bytes_per_expert: int):
@@ -92,7 +97,16 @@ class CacheState:
     def admit(self, key: ExpertKey, t: float = 0.0, pinned: bool = True
               ) -> List[ExpertKey]:
         """Admit key, evicting LRU unpinned entries if needed.
-        Returns evicted keys."""
+
+        Invariant: residency exceeds capacity ONLY while every resident
+        entry is pinned. A pinned (must-have) admission into an all-pinned
+        full cache grows it — correctness requires the weights resident
+        (the engine should never reach this). An unpinned (speculative)
+        admission in the same situation is DECLINED instead: growing past
+        capacity for a prefetch that itself would be the next victim is
+        never worth it. Declined keys stay non-resident and record no fetch
+        event; callers check `contains` after admit. Returns evicted keys.
+        """
         evicted = []
         if key in self.resident:
             self.resident[key] = pinned or self.resident[key]
@@ -104,8 +118,10 @@ class CacheState:
                 if not pin:
                     victim = k
                     break
-            if victim is None:  # everything pinned: grow (engine never should)
-                break
+            if victim is None:  # everything pinned
+                if not pinned:
+                    return evicted  # decline the speculative admission
+                break               # grow (engine never should)
             del self.resident[victim]
             self.events.append(CacheEvent("evict", victim, t))
             evicted.append(victim)
@@ -115,13 +131,34 @@ class CacheState:
         self.peak_resident = max(self.peak_resident, len(self.resident))
         return evicted
 
-    def unpin(self, key: ExpertKey) -> None:
+    def unpin(self, key: ExpertKey, t: float = 0.0) -> List[ExpertKey]:
+        """Unpin `key`; if the cache had grown past capacity while all
+        entries were pinned, shrink back now that a victim exists.
+        Returns keys evicted by the shrink."""
         if key in self.resident:
             self.resident[key] = False
+            return self._shrink(t)
+        return []
 
-    def unpin_all(self) -> None:
+    def unpin_all(self, t: float = 0.0) -> List[ExpertKey]:
         for k in self.resident:
             self.resident[k] = False
+        return self._shrink(t)
+
+    def _shrink(self, t: float = 0.0) -> List[ExpertKey]:
+        evicted = []
+        while len(self.resident) > self.capacity:
+            victim = None
+            for k, pin in self.resident.items():
+                if not pin:
+                    victim = k
+                    break
+            if victim is None:
+                break
+            del self.resident[victim]
+            self.events.append(CacheEvent("evict", victim, t))
+            evicted.append(victim)
+        return evicted
 
     @property
     def peak_bytes(self) -> int:
@@ -154,6 +191,8 @@ class DeviceExpertCache:
             return True
         for victim in self.state.admit(key, t, pinned):
             self._dev.pop(victim, None)
+        if not self.state.contains(key):
+            return False  # speculative admit declined: nothing transferred
         host = self.store.get(key)
         self._dev[key] = tuple(jax.device_put(a) for a in host)
         self.transfer_log.append((key, t))

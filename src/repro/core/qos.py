@@ -8,6 +8,13 @@ queue sheds requests whose deadline is already unmeetable. `LatencyModel`
 keeps EWMA estimates of prefill cost per token and per-step decode cost;
 `AdmissionController` predicts a candidate's TTFT from the work queued ahead
 of it and rejects when the prediction breaches the request's TTFT deadline.
+
+Chunk-aware TTFT: under chunked prefill (serving/batching.py) a prompt is
+processed `chunk_budget` tokens per engine iteration and every iteration
+also runs one batched decode step for the in-flight decoders, so predicted
+TTFT = queue wait + (backlog + own) prefill cost + #iterations x decode-step
+interference. `TBTLedger` records the dual metric — per-request inter-token
+gaps — which chunking bounds and monolithic prefill blows through.
 """
 from __future__ import annotations
 
@@ -65,6 +72,42 @@ def percentile_report(samples: Sequence[float],
     return {f"p{int(q)}": float(np.percentile(a, q)) for q in qs}
 
 
+class TBTLedger:
+    """Per-request inter-token-gap (time-between-tokens) ledger.
+
+    `observe(rid, t)` marks request `rid` emitting a token at wall time `t`
+    and records the gap since its previous token; `close(rid)` forgets a
+    finished request. The max/p99 of these gaps is the stall metric chunked
+    prefill bounds (benchmarks/bench_stall.py): a monolithic prefill of S
+    tokens freezes every in-flight decoder for the whole prefill, which
+    shows up here as a gap of ~ S * prefill_per_token.
+    """
+
+    def __init__(self):
+        self._last: Dict[int, float] = {}
+        self.gaps: List[float] = []              # all gaps, emission order
+        self.by_rid: Dict[int, List[float]] = {}
+
+    def observe(self, rid: int, t: float) -> None:
+        last = self._last.get(rid)
+        if last is not None:
+            gap = t - last
+            self.gaps.append(gap)
+            self.by_rid.setdefault(rid, []).append(gap)
+        self._last[rid] = t
+
+    def close(self, rid: int) -> None:
+        self._last.pop(rid, None)
+
+    def max_gap(self) -> float:
+        return max(self.gaps) if self.gaps else 0.0
+
+    def report(self, qs: Sequence[float] = (50, 99)) -> Dict[str, float]:
+        rep = percentile_report(self.gaps, qs)
+        rep["max"] = self.max_gap()
+        return rep
+
+
 class Admission(enum.Enum):
     ADMIT = "admit"
     QUEUE = "queue"      # keep waiting: deadline still reachable later
@@ -111,8 +154,14 @@ class AdmissionController:
     """Predicts a candidate request's TTFT and gates admission on its SLO.
 
     Predicted TTFT = time already spent queued + prefill cost of the prompts
-    queued ahead + the candidate's own prefill cost + one decode-step drain
-    (new arrivals wait for the in-flight batched step to finish).
+    queued ahead + the candidate's own prefill cost + decode interference.
+    Monolithic engines prefill every same-round admission back-to-back
+    inside one scheduler iteration, so only the single batched-step drain
+    (new arrivals wait for the in-flight step to finish) separates the
+    candidate from its first token. A chunked engine (`chunk_budget`)
+    instead interleaves one batched decode step per chunk iteration, so
+    with decoders running (`running_batch` > 0) the candidate pays one
+    `decode_step` per ceil(total/chunk_budget) iterations.
     """
 
     def __init__(self, model: Optional[LatencyModel] = None,
@@ -122,15 +171,22 @@ class AdmissionController:
         self.n_rejected = 0
 
     def predict_ttft(self, now: float, arrival: float, prompt_len: int,
-                     queued_tokens_ahead: int) -> float:
+                     queued_tokens_ahead: int, *, running_batch: int = 0,
+                     chunk_budget: Optional[int] = None) -> float:
         waited = max(now - arrival, 0.0)
-        return (waited + self.model.predict_prefill(queued_tokens_ahead)
-                + self.model.predict_prefill(prompt_len)
-                + self.model.decode_step)
+        total = queued_tokens_ahead + prompt_len
+        if chunk_budget is not None and chunk_budget > 0 and running_batch:
+            steps = max(1, -(-total // chunk_budget))
+        else:
+            steps = 1
+        return (waited + self.model.predict_prefill(total)
+                + steps * self.model.decode_step)
 
     def decide(self, now: float, arrival: float, prompt_len: int,
                queued_tokens_ahead: int,
-               ttft_slo: Optional[float] = None) -> Admission:
+               ttft_slo: Optional[float] = None, *,
+               running_batch: int = 0,
+               chunk_budget: Optional[int] = None) -> Admission:
         """ADMIT if the predicted TTFT (incl. the backlog ahead) fits the
         deadline; QUEUE if only the backlog breaches it (it may drain, the
         deadline is still reachable); REJECT if even an immediate start
@@ -138,10 +194,13 @@ class AdmissionController:
         slo = ttft_slo if ttft_slo is not None else self.default_ttft_slo
         if slo is None:
             return Admission.ADMIT
-        if self.predict_ttft(now, arrival, prompt_len,
-                             queued_tokens_ahead) <= slo:
+        if self.predict_ttft(now, arrival, prompt_len, queued_tokens_ahead,
+                             running_batch=running_batch,
+                             chunk_budget=chunk_budget) <= slo:
             return Admission.ADMIT
-        if self.predict_ttft(now, arrival, prompt_len, 0) <= slo:
+        if self.predict_ttft(now, arrival, prompt_len, 0,
+                             running_batch=running_batch,
+                             chunk_budget=chunk_budget) <= slo:
             return Admission.QUEUE
         self.n_rejected += 1
         return Admission.REJECT

@@ -99,7 +99,10 @@ class BaseScheduler:
             key = (layer, int(e))
             if not self.cache.lookup(key):
                 self.cache.admit(key, pinned=pinned)
-                fetches.append(int(e))
+                # an unpinned (speculative) admit into an all-pinned full
+                # cache is declined — then there is nothing to transfer
+                if self.cache.contains(key):
+                    fetches.append(int(e))
         return fetches
 
     def _split_hits(self, layer: int, experts: Sequence[int]
@@ -234,7 +237,9 @@ class MIFScheduler(BaseScheduler):
         if layer + 1 < self.L:
             nxt = [e for e in self._prior(layer + 1)
                    if not self.cache.contains((layer + 1, e))]
-            self._fetch_missing(layer + 1, nxt, pinned=False)
+            # keep only what was actually admitted (speculative admits are
+            # declined when the cache is full of pinned entries)
+            nxt = self._fetch_missing(layer + 1, nxt, pinned=False)
         return DecodePlan(layer, hits, misses, prefetch_next=nxt,
                           predicted=predicted)
 

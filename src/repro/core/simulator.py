@@ -266,6 +266,9 @@ def simulate_decode(sched: BaseScheduler, costs: ModelCosts, hw: HW,
                 for e in plan.prefetch_next:
                     sim.issue("comm", t_fx, pdep, f"t{t}L{l}.pf{e}")
             done = cend
+        # mirror the engines: the last layer has no successor plan to
+        # end_layer it, so unpin it at step end (ledger parity)
+        sched.end_layer(cfg.n_layers - 1)
         t_head = _op_time(2 * batch * costs.d * cfg.vocab,
                           cfg.vocab * costs.d * costs.quant_bytes, hw)
         done = sim.issue("comp", t_head, [done], f"t{t}.head")

@@ -470,6 +470,37 @@ def self_attn_decode(x, p, dims: AttnDims, cache_k, cache_v, slot_pos, slot,
     return o.reshape(B, 1, -1) @ p["wo"], ck, cv
 
 
+def self_attn_prefill_chunk(x, p, dims: AttnDims, cache_k, cache_v,
+                            slot_pos, start, *, window=None, use_rope=True):
+    """Chunked prefill: C prompt tokens attend over the request's
+    already-written KV prefix plus themselves, appending their K/V.
+
+    The incremental generalization of `self_attn_full` that chunked prefill
+    (serving/batching.py) is built on: positions start..start+C-1 of one
+    request arrive as a chunk; earlier chunks already wrote cache slots
+    0..start-1. Masking is positional (slot_pos, -1 = empty), so a query at
+    absolute position q sees exactly the keys 0..q — the same valid-key set
+    as monolithic prefill; masked tail slots contribute exact zeros, which
+    keeps the chunked path bit-identical to `self_attn_full` row-wise.
+
+    x: [B,C,d]; cache_k/v: [B,W,Hkv,hd]; slot_pos: [B,W] absolute position
+    per slot (chunk positions NOT yet required — they are written here);
+    start: scalar absolute position of the chunk's first token (prefill
+    never wraps the ring: start+C <= W is the caller's invariant).
+    Returns (out, new_k, new_v, new_slot_pos).
+    """
+    B, C, _ = x.shape
+    positions = start + jnp.arange(C, dtype=jnp.int32)[None, :]  # [1, C]
+    positions = jnp.broadcast_to(positions, (B, C))
+    q, k, v = _qkv(x, p, dims, positions, use_rope)
+    ck = lax.dynamic_update_slice(cache_k, k, (0, start, 0, 0))
+    cv = lax.dynamic_update_slice(cache_v, v, (0, start, 0, 0))
+    sp = lax.dynamic_update_slice(slot_pos, positions, (0, start))
+    o = attention(q, ck, cv, q_pos=positions, k_pos=sp,
+                  window=window, causal=True)
+    return o.reshape(B, C, -1) @ p["wo"], ck, cv, sp
+
+
 def self_attn_decode_batched(x, p, dims: AttnDims, cache_k, cache_v,
                              slot_pos, slot, pos, *, window=None,
                              use_rope=True):

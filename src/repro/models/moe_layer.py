@@ -18,7 +18,9 @@ Design (see DESIGN.md §4):
 
 The capacity path (tokens above capacity dropped) is used for sharded
 training and dry-run lowering; single-device calls default to an exact
-capacity of T*k, so prefill/decode/teacher-forced eval never drop and agree
+capacity of T (top-k ids are distinct per token, so no expert can receive
+more than T assignments), so prefill/decode/teacher-forced eval never drop
+and agree
 bit-for-tolerance. The *serving engine* uses the exact sequential per-expert
 path (`expert_ffn_exact`) — that is the paper's own execution model (experts
 run one at a time from a small cache).

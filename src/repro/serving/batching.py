@@ -5,25 +5,39 @@ load, the regime its TTFT/E2E SLO claims actually target:
 
   * ``RequestQueue`` — arrival queue with SLO-aware admission: predicted
     TTFT (EWMA cost model, ``core/qos.py``) is checked against each
-    request's deadline; requests whose deadline is already unmeetable are
-    shed instead of poisoning the batch.
+    request's deadline, folding in the remaining prefill backlog AND the
+    running batch's decode interference; requests whose deadline is already
+    unmeetable are shed instead of poisoning the batch.
   * ``BatchedServingEngine`` — continuous batching over the layer-by-layer
     engine core: requests are admitted mid-flight; each scheduler iteration
-    runs prefill for newly admitted arrivals, then ONE batched decode step
-    for every in-flight request. KV lives in a slot pool (one slot per
-    in-flight request, per-request write positions, ring invariant
-    slot == pos % W), so sequences at different positions decode together
-    via ``self_attn_decode_batched``.
+    spends at most ``prefill_budget`` prompt tokens of (chunked) prefill
+    work, then runs ONE batched decode step for every in-flight request.
+    KV lives in a slot pool (one slot per in-flight request, per-request
+    write positions, ring invariant slot == pos % W), so sequences at
+    different positions decode together via ``self_attn_decode_batched``.
+  * Chunked, stall-free prefill (paper §III phase disparity): a long prompt
+    no longer freezes in-flight decoders for its whole prefill. Admitted
+    requests sit in state ``prefilling``; each iteration runs one
+    token-budget chunk through ``EngineCore.prefill_chunk`` (the chunk
+    attends over the slot's already-written KV prefix and appends its own
+    K/V), so inter-token gaps for decoders stay bounded by one chunk + one
+    decode step instead of a full prefill. Per-chunk expert activations go
+    through the same per-layer ``prefill_plan`` path, sharing the expert
+    cache with decode. ``prefill_budget=None`` preserves the monolithic
+    behaviour. The ``TBTLedger`` (core/qos.py) records per-request
+    inter-token gaps; ``benchmarks/bench_stall.py`` measures the bound.
   * Decode-phase expert scheduling is shared: per-step, per-layer expert
     selections of all B requests are unioned (first-appearance order) and
     handed to ONE scheduler/DeviceExpertCache pair (paper §V generalized to
     B>1) — each distinct expert is fetched at most once per step, and the
     ExpertMLP prediction stream prefetches layer l+1 for the whole batch.
 
-Exactness invariant: every decode-side kernel is row-wise deterministic and
-per-row accumulation follows each request's own top-k order, so at
-temperature 0 a batched step reproduces the single-request engine's tokens
-bit-exactly (tests/test_serving_batch.py).
+Exactness invariant: every decode-side kernel is row-wise deterministic,
+per-row accumulation follows each request's own top-k order, and chunked
+prefill's valid-key sets/per-token expert order match monolithic prefill
+row-wise — so at temperature 0 a batched step reproduces the
+single-request engine's tokens bit-exactly for EVERY chunk size
+(tests/test_serving_batch.py).
 """
 from __future__ import annotations
 
@@ -35,7 +49,7 @@ from typing import Deque, Dict, List, Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.qos import Admission, AdmissionController
+from repro.core.qos import Admission, AdmissionController, TBTLedger
 from repro.core.scheduler import DuoServeScheduler
 from repro.models.layers import PDT
 from repro.serving.engine import EngineCore, RequestResult
@@ -51,10 +65,18 @@ class Request:
     ttft_slo: Optional[float] = None
     temperature: Optional[float] = None   # None = engine default
     # runtime state ---------------------------------------------------------
-    state: str = "queued"            # queued|running|done|rejected
+    state: str = "queued"            # queued|prefilling|running|done|rejected
     slot: int = -1
+    prefill_pos: int = 0             # prompt tokens already prefilled
     tokens: List[int] = dataclasses.field(default_factory=list)
     prefill_active: List[List[int]] = dataclasses.field(default_factory=list)
+    active_sets: Optional[List[set]] = None   # accumulating, chunked prefill
+    # per-layer [1, W] KV carried across prefill chunks; scattered into the
+    # engine's slot pool ONCE when the final chunk completes (so a chunk
+    # never round-trips the whole [max_batch, W] pool)
+    pf_k: Optional[List] = None
+    pf_v: Optional[List] = None
+    pf_sp: Optional[object] = None
     trace: List[np.ndarray] = dataclasses.field(default_factory=list)
     pred: List[np.ndarray] = dataclasses.field(default_factory=list)
     hits: int = 0
@@ -67,6 +89,10 @@ class Request:
     @property
     def prompt_len(self) -> int:
         return int(self.prompt.shape[0])
+
+    @property
+    def prefill_remaining(self) -> int:
+        return self.prompt_len - self.prefill_pos
 
     @property
     def pos(self) -> int:
@@ -98,7 +124,11 @@ class RequestQueue:
     `pop_admissible` hands back up to `limit` requests whose predicted TTFT
     fits their deadline; breached requests are shed (state='rejected') so a
     doomed prompt never occupies a KV slot another request could meet its
-    SLO with.
+    SLO with. The prediction folds in the prefill backlog already admitted
+    (`backlog_tokens`, chunked requests mid-prefill) and the running batch's
+    decode interference (`running_batch` — one batched decode step per
+    engine iteration the candidate's prefill spans), so admission doesn't
+    systematically under-predict TTFT under high decode concurrency.
     """
 
     def __init__(self, admission: Optional[AdmissionController] = None):
@@ -115,13 +145,16 @@ class RequestQueue:
     def queued_tokens(self) -> int:
         return sum(r.prompt_len for r in self.pending)
 
-    def pop_admissible(self, now: float, limit: int) -> List[Request]:
+    def pop_admissible(self, now: float, limit: int, *,
+                       backlog_tokens: int = 0, running_batch: int = 0,
+                       chunk_budget: Optional[int] = None) -> List[Request]:
         out: List[Request] = []
-        ahead = 0
+        ahead = backlog_tokens
         while self.pending and len(out) < limit:
             req = self.pending[0]
             verdict = self.admission.decide(
-                now, req.arrival, req.prompt_len, ahead, req.ttft_slo)
+                now, req.arrival, req.prompt_len, ahead, req.ttft_slo,
+                running_batch=running_batch, chunk_budget=chunk_budget)
             if verdict is Admission.QUEUE:
                 # deadline still reachable once the backlog drains: keep the
                 # request at the head (FIFO) and stop admitting this round
@@ -141,10 +174,16 @@ class BatchedServingEngine(EngineCore):
 
     max_batch: concurrent in-flight requests (= KV slots).
     max_seq:   per-slot KV capacity W (prompt + generated tokens must fit).
+    prefill_budget: max prompt tokens of prefill work per step(); admitted
+        requests prefill in chunks of at most this many tokens (state
+        'prefilling'), interleaved with the batched decode step so decoder
+        inter-token gaps stay bounded. None = monolithic (each admitted
+        request prefills fully inside the step that admits it).
     """
 
     def __init__(self, cfg, params, policy: str = "duo", *,
                  max_batch: int = 4, max_seq: int = 128,
+                 prefill_budget: Optional[int] = None,
                  queue: Optional[RequestQueue] = None,
                  stats=None, predictor=None, cache_capacity=None,
                  temperature: float = 0.0, sample_seed: int = 0):
@@ -154,6 +193,9 @@ class BatchedServingEngine(EngineCore):
                          sched_batch=max_batch)
         self.max_batch = max_batch
         self.W = max_seq
+        assert prefill_budget is None or prefill_budget >= 1, \
+            "prefill_budget must be None (monolithic) or >= 1 token"
+        self.prefill_budget = prefill_budget
         self.queue = RequestQueue() if queue is None else queue
         self.sample_seed = sample_seed
         hkv, hd = cfg.n_kv_heads, cfg.hd
@@ -162,8 +204,10 @@ class BatchedServingEngine(EngineCore):
         self._V = [jnp.zeros_like(self._K[l]) for l in range(self.L)]
         self._slot_pos = np.full((max_batch, max_seq), -1, np.int32)
         self._free: List[int] = list(range(max_batch))[::-1]
+        self.prefilling: List[Request] = []   # FIFO, state='prefilling'
         self.running: List[Request] = []
         self.finished: List[Request] = []
+        self.tbt = TBTLedger()
         self._next_rid = 0
         self.step_count = 0
         self.decode_batch_hist: List[int] = []
@@ -188,12 +232,36 @@ class BatchedServingEngine(EngineCore):
 
     # -- prefill phase ------------------------------------------------------
     def _admit_and_prefill(self, now: float) -> List[Request]:
-        newly = self.queue.pop_admissible(now, limit=len(self._free))
+        """Admit queue arrivals into free KV slots.
+
+        Monolithic mode (prefill_budget=None): each admitted request
+        prefills fully, right here, exactly as before chunking existed.
+        Chunked mode: the request only transitions to 'prefilling'; chunk
+        execution happens in `_prefill_work` under the step's token budget.
+        """
+        backlog = sum(r.prefill_remaining for r in self.prefilling)
+        newly = self.queue.pop_admissible(
+            now, limit=len(self._free), backlog_tokens=backlog,
+            running_batch=len(self.running),
+            chunk_budget=self.prefill_budget)
         for req in newly:
             slot = self._free.pop()
             req.slot = slot
-            req.state = "running"
             req.t_start = now
+            self._slot_pos[slot, :] = -1
+            if self.prefill_budget is not None:
+                req.state = "prefilling"
+                req.prefill_pos = 0
+                req.active_sets = [set() for _ in range(self.L)]
+                hkv, hd = self.cfg.n_kv_heads, self.cfg.hd
+                req.pf_k = [jnp.zeros((1, self.W, hkv, hd), PDT)
+                            for _ in range(self.L)]
+                req.pf_v = [jnp.zeros_like(req.pf_k[l])
+                            for l in range(self.L)]
+                req.pf_sp = jnp.full((1, self.W), -1, jnp.int32)
+                self.prefilling.append(req)
+                continue
+            req.state = "running"
             t0 = time.perf_counter()
             logits, (kc, vc), active, _ = self.prefill_layers(
                 req.prompt.reshape(1, -1))
@@ -201,14 +269,67 @@ class BatchedServingEngine(EngineCore):
             for l in range(self.L):
                 self._K[l] = self._K[l].at[slot, :S].set(kc[l][0])
                 self._V[l] = self._V[l].at[slot, :S].set(vc[l][0])
-            self._slot_pos[slot, :] = -1
             self._slot_pos[slot, :S] = np.arange(S, dtype=np.int32)
+            req.prefill_pos = S
             req.prefill_active = active
             req.tokens.append(self._sample_req(req, logits[0]))
             req.t_first = time.perf_counter()
+            self.tbt.observe(req.rid, req.t_first)
             self.queue.admission.model.observe_prefill(S, req.t_first - t0)
             self.running.append(req)
         return newly
+
+    def _prefill_work(self) -> int:
+        """Spend up to `prefill_budget` prompt tokens advancing the FIFO of
+        'prefilling' requests by one chunk each (stall-free interleaving).
+
+        A chunk runs through `EngineCore.prefill_chunk` directly against the
+        request's KV slot: the chunk attends over the slot's already-written
+        prefix and appends its own K/V, and the scheduler sees it through
+        the ordinary per-layer `prefill_plan` path. When a request's final
+        chunk completes, its first token is sampled — exactly the token
+        monolithic prefill would have produced — and it joins this same
+        step's decode batch (like a monolithically prefilled arrival).
+        Returns tokens of prefill work done.
+        """
+        if self.prefill_budget is None:
+            return 0  # monolithic mode: prefill happened at admission
+        budget = self.prefill_budget
+        spent = 0
+        while self.prefilling and budget > 0:
+            req = self.prefilling[0]
+            C = min(budget, req.prefill_remaining)
+            t0 = time.perf_counter()
+            slot, start = req.slot, req.prefill_pos
+            stop = start + C
+            final = stop == req.prompt_len
+            logits, req.pf_k, req.pf_v, req.pf_sp, act, _ = \
+                self.prefill_chunk(req.prompt[None, start:stop], start,
+                                   req.pf_k, req.pf_v, req.pf_sp,
+                                   need_logits=final)
+            for l in range(self.L):
+                req.active_sets[l].update(act[l])
+            req.prefill_pos = stop
+            spent += C
+            budget -= C
+            self.queue.admission.model.observe_prefill(
+                C, time.perf_counter() - t0)
+            if final:
+                # one scatter into the slot pool for the whole prompt
+                for l in range(self.L):
+                    self._K[l] = self._K[l].at[slot].set(req.pf_k[l][0])
+                    self._V[l] = self._V[l].at[slot].set(req.pf_v[l][0])
+                self._slot_pos[slot] = np.asarray(req.pf_sp[0])
+                req.pf_k = req.pf_v = req.pf_sp = None
+                req.prefill_active = [sorted(s) for s in req.active_sets]
+                req.active_sets = None
+                req.tokens.append(self._sample_req(req, logits[0]))
+                req.t_first = time.perf_counter()
+                self.tbt.observe(req.rid, req.t_first)
+                req.state = "running"
+                self.prefilling.pop(0)
+                self.running.append(req)
+        return spent
 
     def _sample_req(self, req: Request, logits_row) -> int:
         temp = (self.temperature if req.temperature is None
@@ -286,11 +407,16 @@ class BatchedServingEngine(EngineCore):
             # prediction stream: prefetch layer l+1's experts for the batch
             for e in plan.prefetch_next:
                 self.cache.prefetch((l + 1, e))
+        # unpin the successor-less last layer (see MoEServingEngine.decode):
+        # without this, a continuously batching engine (which never calls
+        # begin_request) accumulates pinned (L-1, e) entries forever
+        self.sched.end_layer(self.L - 1)
         logits = self._head(self.dev["ln_f"], self.dev["embed"], x[:, -1])
         lg_np = np.asarray(logits, np.float64)
         t_tok = time.perf_counter()
         for b, r in enumerate(batch):
             r.tokens.append(self._sample_req(r, lg_np[b]))
+            self.tbt.observe(r.rid, t_tok)
             r.trace.append(step_trace[b])
             r.pred.append(step_pred[b])
         self.queue.admission.model.observe_decode_step(t_tok - t0)
@@ -298,15 +424,17 @@ class BatchedServingEngine(EngineCore):
 
     # -- scheduler loop -----------------------------------------------------
     def step(self, now: Optional[float] = None) -> bool:
-        """One engine iteration: admit + prefill new arrivals, then one
-        batched decode step for all in-flight requests. Returns True if any
-        work was done."""
+        """One engine iteration: admit new arrivals, spend the prefill token
+        budget on chunked prefill work (monolithic when prefill_budget is
+        None), then one batched decode step for all in-flight requests.
+        Returns True if any work was done."""
         now = time.perf_counter() if now is None else now
         admitted = self._admit_and_prefill(now)
+        prefilled = self._prefill_work()
         batch = [r for r in self.running if not r.done]
         if batch:
             self._decode_step(batch)
-        did_work = bool(admitted or batch)
+        did_work = bool(admitted or prefilled or batch)
         self.step_count += 1
         # retire finished requests, free their slots
         still = []
@@ -317,15 +445,17 @@ class BatchedServingEngine(EngineCore):
                 self._slot_pos[r.slot, :] = -1
                 self._free.append(r.slot)
                 self.finished.append(r)
+                self.tbt.close(r.rid)
             else:
                 still.append(r)
         self.running = still
         return did_work
 
     def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
-        """Drive step() until queue + running set are empty."""
+        """Drive step() until queue + prefilling + running are all empty."""
         for _ in range(max_steps):
             self.step()
-            if not self.running and not len(self.queue):
+            if not self.running and not self.prefilling \
+                    and not len(self.queue):
                 break
         return self.finished

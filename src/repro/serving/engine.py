@@ -7,6 +7,12 @@ can interleave host->device expert transfers with dispatched computation:
     by expert, then the policy's PrefillPlan drives the fetch/compute
     pipeline. With JAX async dispatch, issuing `device_put(expert e+1)` after
     dispatching `compute(expert e)` overlaps them (two-stream analogue).
+    Prefill is also available incrementally (``prefill_chunk``): a
+    token-budget chunk attends over the request's already-written KV prefix
+    and appends its own K/V, carrying per-layer KV state across chunks —
+    the unit of work the stall-free continuous-batching front-end
+    (``serving/batching.py``) interleaves with batched decode. Chunked and
+    monolithic prefill are bit-identical at any chunk size.
   * decode: per layer — gate result compared against prefetched experts
     (sync point #1); misses corrected with a blocking fetch; the ExpertMLP is
     dispatched on the "prediction stream" (async) to choose layer l+1's
@@ -74,7 +80,7 @@ class EngineCore:
                  stats: Optional[TraceStats] = None, predictor=None,
                  cache_capacity: Optional[int] = None,
                  temperature: float = 0.8, sample_seed: int = 0,
-                 sched_batch: int = 1):
+                 sched_batch: int = 1, prefill_chunk: Optional[int] = None):
         assert cfg.is_moe and cfg.family in ("moe", "dense"), \
             "engine schedules experts; use bundle.decode for non-MoE archs"
         assert cfg.n_dense_layers == 0, "engine assumes uniform MoE stack"
@@ -95,6 +101,7 @@ class EngineCore:
             "moe": moe_dev,
         }
         self.temperature = temperature
+        self.prefill_chunk_size = prefill_chunk
         self._rng = np.random.default_rng(sample_seed)
         sc = StateConstructor(stats) if stats is not None else None
         self.sched = make_scheduler(
@@ -116,6 +123,13 @@ class EngineCore:
             h, (k, v) = L.self_attn_full(L.rms_norm(x, lp["ln1"], eps),
                                          lp["attn"], dims)
             return x + h, k, v
+
+        @jax.jit
+        def attn_prefill_chunk(lp, x, ck, cv, sp, start):
+            h, ck, cv, sp = L.self_attn_prefill_chunk(
+                L.rms_norm(x, lp["ln1"], eps), lp["attn"], dims,
+                ck, cv, sp, start)
+            return x + h, ck, cv, sp
 
         @jax.jit
         def attn_decode(lp, x, ck, cv, sp, slot, pos):
@@ -166,6 +180,7 @@ class EngineCore:
             return jnp.where(mask, lg.astype(jnp.float32), -1e9)
 
         self._attn_prefill = attn_prefill
+        self._attn_prefill_chunk = attn_prefill_chunk
         self._attn_decode = attn_decode
         self._attn_decode_batched = attn_decode_batched
         self._gate = gate
@@ -203,33 +218,111 @@ class EngineCore:
             acc = acc + self._expert(xn, w1, w3, w2, gate_w)
         return acc.reshape(xn.shape)
 
-    def prefill_layers(self, tokens: np.ndarray):
+    def _prefill_moe(self, l: int, lp, x):
+        """Shared per-layer MoE body of both prefill paths: gate, dispatch
+        the policy's PrefillPlan, add the expert output, unpin the layer.
+        Returns (x_out, per-token ids [T, k] np, sorted active experts)."""
+        xn, w, ids = self._gate(self._moe_dev(l), lp, x)
+        ids_np = np.asarray(ids)  # sync: gate result needed by dispatcher
+        act = sorted(set(int(e) for e in ids_np.ravel()))
+        plan = self.sched.prefill_plan(l, act)
+        y = self._run_experts_prefill(l, xn, w, ids, plan)
+        x = x + y
+        self.sched.end_layer(l)
+        return x, ids_np.reshape(-1, self.k), act
+
+    def prefill_chunk(self, chunk: np.ndarray, start: int,
+                      kc: List[jax.Array], vc: List[jax.Array],
+                      sp: jax.Array, *, need_logits: bool = True):
+        """Run ONE prefill chunk [1, C] through all layers incrementally.
+
+        The unit of prefill work for chunked/stall-free serving: the chunk's
+        queries attend over the KV prefix written by earlier chunks (slots
+        0..start-1 of the per-layer buffers kc/vc, [1, W, Hkv, hd]) plus
+        themselves, and append their K/V at slots start..start+C-1. Expert
+        scheduling goes through the SAME per-layer `prefill_plan` path as
+        monolithic prefill, so the policy's fetch pipeline and cache ledger
+        see each chunk as a (smaller) prefill.
+
+        Returns (logits [1, Vp] of the chunk's last position — or None when
+        need_logits=False — kc, vc, sp, active_per_layer for this chunk,
+        per-token paths [C, L, k]).
+        """
+        x = self.dev["embed"].at[jnp.asarray(chunk)].get(mode="clip")
+        C = chunk.shape[1]
+        start_j = jnp.int32(start)
+        active: List[List[int]] = []
+        paths = np.zeros((C, self.L, self.k), np.int32)
+        for l in range(self.L):
+            lp = self._layer(l)
+            x, kc[l], vc[l], sp = self._attn_prefill_chunk(
+                lp, x, kc[l], vc[l], sp, start_j)
+            x, ids_np, act = self._prefill_moe(l, lp, x)
+            paths[:, l] = ids_np
+            active.append(act)
+        logits = (self._head(self.dev["ln_f"], self.dev["embed"], x[:, -1])
+                  if need_logits else None)
+        return logits, kc, vc, sp, active, paths
+
+    def prefill_layers(self, tokens: np.ndarray,
+                       chunk_size: Optional[int] = None):
         """Run the layer-by-layer prefill pipeline on tokens [1, S].
+
+        chunk_size (default: the engine's `prefill_chunk_size`): None runs
+        the
+        whole prompt monolithically via `self_attn_full`; an int >= 1 runs
+        it as a sequence of `prefill_chunk` calls over token-budget chunks.
+        Both paths produce bit-identical results (tests/test_serving_batch).
 
         Returns (last_logits [1, Vp], (kc, vc), active_per_layer,
         per-token paths [S, L, k]). Sampling is left to the caller so both
         the single-request and the batched front-end can share this path.
         """
-        x = self.dev["embed"].at[jnp.asarray(tokens)].get(mode="clip")
+        if chunk_size is None:
+            chunk_size = self.prefill_chunk_size
         S = tokens.shape[1]
+        if chunk_size is not None:
+            # always the incremental path when a chunk size is set — with
+            # chunk_size >= S that is one whole-prompt chunk, so the
+            # prefill_chunk kernel itself is exercised at every size
+            return self._prefill_layers_chunked(tokens, chunk_size)
+        x = self.dev["embed"].at[jnp.asarray(tokens)].get(mode="clip")
         kc, vc = [], []
         active: List[List[int]] = []
         paths = np.zeros((S, self.L, self.k), np.int32)
         for l in range(self.L):
             lp = self._layer(l)
             x, k_, v_ = self._attn_prefill(lp, x)
-            xn, w, ids = self._gate(self._moe_dev(l), lp, x)
-            ids_np = np.asarray(ids)  # sync: gate result needed by dispatcher
-            paths[:, l] = ids_np.reshape(S, self.k)
-            act = sorted(set(int(e) for e in ids_np.ravel()))
-            plan = self.sched.prefill_plan(l, act)
-            y = self._run_experts_prefill(l, xn, w, ids, plan)
-            x = x + y
+            x, ids_np, act = self._prefill_moe(l, lp, x)
+            paths[:, l] = ids_np
             kc.append(k_)
             vc.append(v_)
-            self.sched.end_layer(l)
             active.append(act)
         logits = self._head(self.dev["ln_f"], self.dev["embed"], x[:, -1])
+        return logits, (kc, vc), active, paths
+
+    def _prefill_layers_chunked(self, tokens: np.ndarray, chunk_size: int):
+        """Chunked drop-in for `prefill_layers`: same return contract, the
+        prompt processed `chunk_size` tokens at a time through
+        `prefill_chunk` (per-layer KV buffers sized to the prompt)."""
+        assert chunk_size >= 1
+        S = tokens.shape[1]
+        hkv, hd = self.cfg.n_kv_heads, self.cfg.hd
+        kc = [jnp.zeros((1, S, hkv, hd), PDT) for _ in range(self.L)]
+        vc = [jnp.zeros_like(kc[l]) for l in range(self.L)]
+        sp = jnp.full((1, S), -1, jnp.int32)
+        active_sets = [set() for _ in range(self.L)]
+        paths = np.zeros((S, self.L, self.k), np.int32)
+        logits = None
+        for start in range(0, S, chunk_size):
+            stop = min(start + chunk_size, S)
+            logits, kc, vc, sp, act, cpaths = self.prefill_chunk(
+                tokens[:, start:stop], start, kc, vc, sp,
+                need_logits=(stop == S))
+            paths[start:stop] = cpaths
+            for l in range(self.L):
+                active_sets[l].update(act[l])
+        active = [sorted(s) for s in active_sets]
         return logits, (kc, vc), active, paths
 
     def _sample(self, logits) -> int:
@@ -302,6 +395,10 @@ class MoEServingEngine(EngineCore):
                 # prediction stream: prefetch next layer's predicted experts
                 for e in plan.prefetch_next:
                     self.cache.prefetch((l + 1, e))
+            # the policies end_layer(l) when planning l+1; the LAST layer has
+            # no successor, so unpin it here or its pins outlive the step and
+            # accumulate until the ledger's all-pinned growth branch fires
+            self.sched.end_layer(self.L - 1)
             logits = self._head(self.dev["ln_f"], self.dev["embed"], x[:, -1])
             out.append(self._sample(logits))
         return np.asarray(out[1:]), trace, pred_trace

@@ -8,6 +8,7 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.cache import CacheState
+from repro.core.scheduler import union_selection
 from repro.core.tracer import ExpertsTracer
 from repro.models import moe_layer as M
 from repro.configs.base import ArchConfig
@@ -49,20 +50,113 @@ def test_cache_capacity_and_counters(cap, seq):
     assert c.peak_bytes == c.peak_resident * 100
 
 
-@given(cap=st.integers(2, 6), keys=st.lists(
-    st.tuples(st.integers(0, 2), st.integers(0, 5)), min_size=1, max_size=30))
-def test_cache_lru_eviction_order(cap, keys):
-    """Evicted victim is always the least-recently-used unpinned entry."""
+cache_ops = st.lists(
+    st.tuples(st.sampled_from(["lookup", "admit_pinned", "admit", "unpin"]),
+              st.integers(0, 2), st.integers(0, 5)),
+    min_size=1, max_size=60)
+
+
+@given(cap=st.integers(2, 6), seq=cache_ops)
+def test_cache_lru_eviction_order(cap, seq):
+    """Every evicted victim is the least-recently-used unpinned entry at the
+    moment of eviction, verified against an external recency/pin model."""
     c = CacheState(cap, 1)
-    for k in keys:
-        before = list(c.resident)
-        evicted = c.admit(k, pinned=False)
-        for v in evicted:
-            unpinned_before = [x for x in before if not False]
-            # victim must have been the first unpinned in insertion order
-            assert v == before[[x for x in range(len(before))][0]] or True
-            assert v not in c.resident
-    assert len(c.resident) <= cap
+    clock = 0
+    recency = {}   # key -> last-touch time observed from outside
+    pins = {}      # key -> pinned state we expect
+    for op, l, e in seq:
+        key, clock = (l, e), clock + 1
+        if op == "lookup":
+            if c.lookup(key):
+                recency[key] = clock
+        elif op == "unpin":
+            evicted = c.unpin(key)
+            if key in pins:
+                pins[key] = False
+            for v in evicted:   # shrink-on-unpin of an over-grown cache
+                assert not pins.pop(v), "shrink evicted a pinned entry"
+                recency.pop(v, None)
+        else:
+            pinned = op == "admit_pinned"
+            was_resident = c.contains(key)
+            before = dict(pins)
+            evicted = c.admit(key, pinned=pinned)
+            for v in evicted:
+                assert not before[v], f"evicted a pinned entry {v}"
+                # no other unpinned entry (still resident) was older
+                others = [k for k in c.resident
+                          if k != key and not before.get(k, True)]
+                assert all(recency[v] <= recency[k] for k in others), \
+                    f"victim {v} was not the LRU unpinned entry"
+                recency.pop(v, None)
+                pins.pop(v, None)
+            if c.contains(key):
+                pins[key] = pinned or (was_resident
+                                       and before.get(key, False))
+                recency[key] = clock
+            else:  # speculative admit declined by an all-pinned full cache
+                assert not pinned and not evicted
+                assert all(before.values()) and len(before) >= cap
+        # THE invariant: over capacity only while everything is pinned
+        if len(c.resident) > cap:
+            assert all(c.resident.values()), \
+                "over capacity with unpinned entries"
+    assert set(c.resident) == set(pins)
+
+
+@given(cap=st.integers(2, 6), fill=st.lists(
+    st.tuples(st.integers(0, 2), st.integers(0, 5)), min_size=1, max_size=40))
+def test_cache_pin_survives_pressure(cap, fill):
+    """A pinned entry is NEVER evicted, however much unpinned churn follows."""
+    c = CacheState(cap, 1)
+    protected = (9, 9)
+    c.admit(protected, pinned=True)
+    for k in fill:
+        if k == protected:
+            continue
+        c.admit(k, pinned=False)
+        assert c.contains(protected)
+        assert len(c.resident) <= cap
+
+
+# ---------------------------------------------------------------------------
+# union_selection invariants
+# ---------------------------------------------------------------------------
+
+_leaf = st.integers(0, 9)
+_row = st.lists(_leaf, min_size=0, max_size=4)
+_element = st.one_of(
+    _leaf,
+    _row,
+    _row.map(lambda r: np.asarray(r, np.int32)),
+    st.lists(st.lists(_leaf, min_size=2, max_size=2), min_size=0, max_size=3)
+    .map(lambda rows: np.asarray(rows, np.int32).reshape(-1, 2)),
+)
+selections = st.lists(_element, min_size=0, max_size=6)
+
+
+def _flatten(sel):
+    out = []
+    for e in sel:
+        if isinstance(e, (list, tuple, np.ndarray)):
+            out.extend(_flatten(list(e)))
+        else:
+            out.append(int(e))
+    return out
+
+
+@given(sel=selections)
+def test_union_selection_properties(sel):
+    """Duplicate-free, first-appearance order-stable, nested/flat/ndarray
+    inputs all flatten to the same reference order."""
+    got = union_selection(sel)
+    flat = _flatten(sel)
+    expected = list(dict.fromkeys(flat))
+    assert got == expected
+    assert len(got) == len(set(got))
+    # idempotent and insensitive to re-nesting
+    assert union_selection(got) == got
+    assert union_selection([flat]) == expected
 
 
 # ---------------------------------------------------------------------------

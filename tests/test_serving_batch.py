@@ -1,12 +1,15 @@
 """Continuous-batching correctness: batched decode must be bit-exact vs the
-single-request engine at temperature 0, and the shared-cache ledger must
-count distinct experts per step (decode-plan union semantics)."""
+single-request engine at temperature 0, chunked prefill must be bit-exact vs
+monolithic for EVERY chunk size (including mid-prefill decode interleaving),
+and the shared-cache ledger must count distinct experts per step
+(decode-plan union semantics)."""
 import jax
 import numpy as np
 import pytest
 
 from repro.configs.base import get_config, reduced
-from repro.core.qos import (Admission, AdmissionController, LatencyModel)
+from repro.core.qos import (Admission, AdmissionController, LatencyModel,
+                            TBTLedger)
 from repro.core.scheduler import union_selection
 from repro.models.model import build
 from repro.serving.batching import BatchedServingEngine, RequestQueue
@@ -106,6 +109,85 @@ def test_shared_cache_accounting(setup):
     assert eng.sched.cache.peak_resident <= eng.sched.cache.capacity
 
 
+@pytest.mark.parametrize("chunk", [1, 3, "S"])
+def test_chunked_prefill_bit_exact(setup, chunk):
+    """Chunked prefill (any chunk size) yields bit-identical tokens AND
+    identical per-layer active-expert sets vs monolithic prefill."""
+    cfg, params, prompts, refs = setup
+    for p, ref in zip(prompts[:2], refs[:2]):
+        size = len(p) if chunk == "S" else chunk
+        eng = MoEServingEngine(cfg, params, policy="duo", temperature=0.0,
+                               prefill_chunk=size)
+        r = eng.serve(p, max_new=MAX_NEW)
+        np.testing.assert_array_equal(r.tokens, ref.tokens,
+                                      err_msg=f"chunk={size} diverged")
+        assert r.prefill_active == ref.prefill_active, \
+            f"chunk={size}: per-layer active-expert sets differ"
+
+
+def test_chunked_batched_bit_exact(setup):
+    """The chunked continuous-batching pipeline (prefill_budget) produces
+    the monolithic engine's tokens for every request."""
+    cfg, params, prompts, refs = setup
+    eng = BatchedServingEngine(cfg, params, policy="duo", max_batch=4,
+                               max_seq=32, temperature=0.0, prefill_budget=4)
+    for p in prompts:
+        eng.submit(p, max_new=MAX_NEW)
+    finished = sorted(eng.run_until_drained(), key=lambda r: r.rid)
+    assert len(finished) == len(prompts)
+    for i, r in enumerate(finished):
+        np.testing.assert_array_equal(r.result().tokens, refs[i].tokens)
+        assert r.prefill_active == refs[i].prefill_active
+
+
+def test_chunked_interleaving_is_stall_free(setup):
+    """While a long prompt prefills in chunks, an in-flight decoder keeps
+    producing tokens every step — and both stay bit-exact."""
+    cfg, params, prompts, refs = setup
+    budget = 4
+    eng = BatchedServingEngine(cfg, params, policy="duo", max_batch=2,
+                               max_seq=32, temperature=0.0,
+                               prefill_budget=budget)
+    decoder = eng.submit(prompts[2], max_new=MAX_NEW)   # 9 tokens
+    while decoder.state != "running":
+        eng.step()
+    long = eng.submit(prompts[1], max_new=MAX_NEW)      # 16 tokens
+    chunk_steps = 0
+    decoded_during_prefill = 0
+    while long.state in ("queued", "prefilling"):
+        before = len(decoder.tokens)
+        eng.step()
+        chunk_steps += 1
+        if not decoder.done:
+            assert len(decoder.tokens) == before + 1, \
+                "decoder stalled during a prefill chunk step"
+            decoded_during_prefill += 1
+    # 16 tokens / budget 4 -> 4 chunk iterations, decode advancing in each
+    assert chunk_steps == -(-long.prompt_len // budget)
+    assert decoded_during_prefill >= 1
+    eng.run_until_drained()
+    np.testing.assert_array_equal(decoder.result().tokens, refs[2].tokens)
+    np.testing.assert_array_equal(long.result().tokens, refs[1].tokens)
+    assert long.prefill_active == refs[1].prefill_active
+
+
+def test_tbt_ledger_gaps():
+    led = TBTLedger()
+    led.observe(0, 1.0)
+    led.observe(0, 1.5)
+    led.observe(1, 2.0)
+    led.observe(0, 3.0)
+    led.observe(1, 2.25)
+    assert led.by_rid[0] == [0.5, 1.5]
+    assert led.by_rid[1] == [0.25]
+    assert led.max_gap() == 1.5
+    led.close(0)
+    led.observe(0, 9.0)       # fresh baseline after close: no gap recorded
+    assert led.by_rid[0] == [0.5, 1.5]
+    rep = led.report()
+    assert rep["max"] == 1.5 and rep["p50"] <= rep["p99"]
+
+
 def test_union_selection_shapes():
     assert union_selection([3, 1, 2]) == [3, 1, 2]
     assert union_selection([[3, 1], [1, 2]]) == [3, 1, 2]
@@ -135,6 +217,35 @@ def test_admission_queue_verdict_keeps_fifo():
     assert not q.rejected
     # backlog drained -> the queued request admits on the next round
     assert [r.rid for r in q.pop_admissible(now=0.0, limit=2)] == [1]
+
+
+def test_admission_folds_decode_load():
+    """A chunked engine interleaves one batched decode step per chunk
+    iteration, so predicted TTFT charges decode interference per iteration
+    when decoders are running — admission no longer under-predicts under
+    high decode concurrency. Monolithic prefill runs all same-round admits
+    inside ONE iteration, so it keeps the single drain step."""
+    ctl = AdmissionController(
+        LatencyModel(prefill_per_token=0.1, decode_step=0.5))
+    base = ctl.predict_ttft(0.0, 0.0, 10, 0)
+    assert base == pytest.approx(0.1 * 10 + 0.5)      # one drain step
+    busy = ctl.predict_ttft(0.0, 0.0, 10, 0, running_batch=2, chunk_budget=5)
+    assert busy == pytest.approx(0.1 * 10 + 2 * 0.5)  # ceil(10/5) iterations
+    assert busy > base
+    # monolithic: back-to-back prefills in one iteration — no per-request
+    # interference term, whatever is queued ahead or running
+    mono = ctl.predict_ttft(0.0, 0.0, 10, 30, running_batch=4)
+    assert mono == pytest.approx(0.1 * 40 + 0.5)
+    # an idle chunked engine has no decoders to interleave with either
+    idle = ctl.predict_ttft(0.0, 0.0, 10, 0, running_batch=0, chunk_budget=5)
+    assert idle == pytest.approx(base)
+    # interference alone can now (correctly) push a request over its SLO
+    tight = AdmissionController(
+        LatencyModel(prefill_per_token=0.1, decode_step=1.0),
+        default_ttft_slo=2.5)
+    assert tight.decide(0.0, 0.0, 10, 0) is Admission.ADMIT
+    assert tight.decide(0.0, 0.0, 10, 0, running_batch=1,
+                        chunk_budget=5) is Admission.REJECT
 
 
 def test_admission_controller_slo():
