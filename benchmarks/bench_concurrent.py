@@ -25,14 +25,15 @@ from repro.configs.base import get_config, reduced
 from repro.core.qos import AdmissionController, percentile_report
 from repro.data.pipeline import PromptWorkload, squad_like
 from repro.models.model import build
-from repro.serving.batching import BatchedServingEngine, RequestQueue
+from repro.serving.batching import (BatchedServingEngine, RequestQueue,
+                                    parse_prefill_budget)
 
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
 
 
 def run_load(cfg, params, prompts, *, rate: float, max_new: int,
              max_batch: int, policy: str, ttft_slo, seed: int = 0,
-             prefill_budget=None) -> dict:
+             prefill_budget=None, tbt_slo=None, fairness="rr") -> dict:
     """Offer `prompts` at Poisson rate `rate` req/s; drain; summarize."""
     rng = np.random.default_rng(seed)
     inter = rng.exponential(1.0 / rate, size=len(prompts))
@@ -45,6 +46,7 @@ def run_load(cfg, params, prompts, *, rate: float, max_new: int,
                                max_seq=max(len(p) for p in prompts)
                                + max_new + 2,
                                prefill_budget=prefill_budget,
+                               tbt_slo=tbt_slo, prefill_fairness=fairness,
                                queue=queue, temperature=0.0)
     pending = list(zip(arrivals, prompts))
     while pending or len(eng.queue) or eng.prefilling or eng.running:
@@ -90,8 +92,15 @@ def main():
     ap.add_argument("--policy", default="duo+")
     ap.add_argument("--ttft-slo", type=float, default=None,
                     help="seconds; requests predicted to breach are shed")
-    ap.add_argument("--prefill-budget", type=int, default=None,
-                    help="chunked prefill tokens per step (None=monolithic)")
+    ap.add_argument("--prefill-budget", default=None,
+                    help="chunked prefill tokens per step, 'auto' to derive "
+                         "from the live LatencyModel (needs --tbt-slo), or "
+                         "omit for monolithic")
+    ap.add_argument("--tbt-slo", type=float, default=None,
+                    help="target inter-token gap (s) for --prefill-budget "
+                         "auto")
+    ap.add_argument("--fairness", default="rr", choices=["rr", "fifo"],
+                    help="chunked-prefill budget sharing across requests")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
 
@@ -109,7 +118,8 @@ def main():
         rec = run_load(cfg, params, prompts, rate=rate,
                        max_new=args.max_new, max_batch=args.max_batch,
                        policy=args.policy, ttft_slo=args.ttft_slo,
-                       prefill_budget=args.prefill_budget)
+                       prefill_budget=parse_prefill_budget(args.prefill_budget),
+                       tbt_slo=args.tbt_slo, fairness=args.fairness)
         records.append(rec)
         print(f"{rate:6.2f} {rec['completed']:5d} {rec['rejected']:5d} "
               f"{rec['ttft']['p50']:8.2f}s {rec['ttft']['p99']:8.2f}s "

@@ -14,7 +14,8 @@ from repro.configs.base import get_config, reduced
 from repro.core.qos import AdmissionController, LatencyModel, percentile_report
 from repro.data.pipeline import PromptWorkload, squad_like
 from repro.models.model import build
-from repro.serving.batching import BatchedServingEngine, RequestQueue
+from repro.serving.batching import (BatchedServingEngine, RequestQueue,
+                                    parse_prefill_budget)
 from repro.serving.engine import MoEServingEngine
 
 
@@ -25,9 +26,13 @@ def main():
     ap.add_argument("--max-new", type=int, default=5)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--policy", default="duo+")
-    ap.add_argument("--prefill-budget", type=int, default=None,
+    ap.add_argument("--prefill-budget", default=None,
                     help="prompt tokens of chunked prefill per engine step "
-                         "(stall-free interleaving); default monolithic")
+                         "(stall-free interleaving), or 'auto' to derive "
+                         "the chunk from the live LatencyModel via "
+                         "--tbt-slo; default monolithic")
+    ap.add_argument("--tbt-slo", type=float, default=None,
+                    help="target inter-token gap (s) for auto budget")
     args = ap.parse_args()
 
     cfg = reduced(get_config(args.arch))
@@ -45,7 +50,9 @@ def main():
     # continuous batching: all requests in flight, one shared expert cache
     eng = BatchedServingEngine(cfg, params, policy=args.policy,
                                max_batch=args.max_batch, max_seq=64,
-                               prefill_budget=args.prefill_budget,
+                               prefill_budget=parse_prefill_budget(
+                                   args.prefill_budget),
+                               tbt_slo=args.tbt_slo,
                                temperature=0.0)
     t0 = time.perf_counter()
     for p in prompts:

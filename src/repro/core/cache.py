@@ -1,24 +1,39 @@
-"""Expert weight stores and device-side expert caches.
+"""Unified expert-residency subsystem: one ledger, fixed slot-pool buffers.
 
 HostExpertStore — the "CPU expert cache" of the paper: all routed-expert
-weights live in host RAM (numpy). DeviceExpertCache — the "GPU expert cache":
-a small set of device-resident slots per layer (DuoServe sizes it to top-k),
-filled by `prefetch` (jax.device_put → host->HBM DMA; asynchronously
-dispatched, so issuing a prefetch then dispatching compute overlaps them the
-way the paper's two CUDA streams do).
+weights live in host RAM (numpy). ExpertResidency — the "GPU expert cache":
+ONE CacheState ledger (shared by reference with the scheduling policy, see
+core/scheduler.py `make_scheduler(state=...)`) fused with preallocated
+slot-pool device buffers — stacked ``[pool_capacity, d, de]`` arrays for
+w1/w3/w2 allocated once at engine construction. Every ledger decision is
+applied symmetrically to device memory through the `_on_admit`/`_on_evict`
+hooks: admission allocates a pool slot, eviction (LRU, shrink-on-unpin, or
+ODF's free-after-forward `drop`) frees it. Expert HBM is therefore provably
+``pool_capacity * bytes_per_expert`` — a fixed bound, not a high-water mark
+of an ever-growing dict.
 
-Both the serving engine and the discrete-event simulator share the same
-residency/eviction logic via CacheState, so simulated peak memory and hit
-rates reflect exactly what the engine would do.
+Transfers keep the paper's two-stream overlap: the ledger admits at *plan*
+time (scheduler), but the host->device copy is issued at *dispatch* time by
+the engine (`prefetch`): ``jax.device_put`` per slab feeding a
+donated-buffer ``.at[slot].set`` so the write is in place (no allocator
+churn) and, under JAX async dispatch, overlaps subsequently dispatched
+compute the way the paper's communication stream does. Compute reads
+weights by slot index straight out of the pools (see EngineCore._jit_fns).
+
+Both the serving engine and the discrete-event simulator drive the same
+CacheState logic (the simulator with a plain ledger-only CacheState), so
+simulated peak memory and hit rates reflect exactly what the engine does.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import functools
 import time
 from typing import Dict, Iterable, List, Optional, Set, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 ExpertKey = Tuple[int, int]  # (layer, expert)
@@ -63,6 +78,11 @@ class CacheState:
     among non-pinned entries; `pin`/`unpin` protect experts between prefetch
     and use (the paper's sync-point semantics).
 
+    Every residency mutation funnels through `_on_admit`/`_on_evict` hooks
+    (no-ops here) so a subclass can mirror the ledger into device memory —
+    ExpertResidency maps admissions to pool-slot allocations and evictions
+    to slot frees, keeping ledger and device buffers one mechanism.
+
     Invariant (tests/test_property.py): residency exceeds capacity ONLY
     while every resident entry is pinned — pinned must-have admissions may
     grow an all-pinned cache, speculative (unpinned) ones are declined, and
@@ -78,6 +98,13 @@ class CacheState:
         self.peak_resident = 0
         self.hits = 0
         self.misses = 0
+
+    # -- device-mirror hooks (overridden by ExpertResidency) -----------------
+    def _on_admit(self, key: ExpertKey) -> None:
+        """Called exactly once when `key` newly becomes resident."""
+
+    def _on_evict(self, key: ExpertKey) -> None:
+        """Called exactly once when `key` leaves residency (any path)."""
 
     def contains(self, key: ExpertKey) -> bool:
         return key in self.resident
@@ -101,11 +128,12 @@ class CacheState:
         Invariant: residency exceeds capacity ONLY while every resident
         entry is pinned. A pinned (must-have) admission into an all-pinned
         full cache grows it — correctness requires the weights resident
-        (the engine should never reach this). An unpinned (speculative)
-        admission in the same situation is DECLINED instead: growing past
-        capacity for a prefetch that itself would be the next victim is
-        never worth it. Declined keys stay non-resident and record no fetch
-        event; callers check `contains` after admit. Returns evicted keys.
+        (engines size their residency so this never fires; ExpertResidency
+        regrows its pool if it does). An unpinned (speculative) admission in
+        the same situation is DECLINED instead: growing past capacity for a
+        prefetch that itself would be the next victim is never worth it.
+        Declined keys stay non-resident and record no fetch event; callers
+        check `contains` after admit. Returns evicted keys.
         """
         evicted = []
         if key in self.resident:
@@ -121,15 +149,28 @@ class CacheState:
             if victim is None:  # everything pinned
                 if not pinned:
                     return evicted  # decline the speculative admission
-                break               # grow (engine never should)
+                break               # grow (sized engines never reach this)
             del self.resident[victim]
+            self._on_evict(victim)
             self.events.append(CacheEvent("evict", victim, t))
             evicted.append(victim)
         self.resident[key] = pinned
+        self._on_admit(key)
         self.events.append(
             CacheEvent("fetch", key, t, self.bytes_per_expert))
         self.peak_resident = max(self.peak_resident, len(self.resident))
         return evicted
+
+    def drop(self, key: ExpertKey, t: float = 0.0) -> bool:
+        """Remove `key` from residency without an evict event: the ODF
+        free-after-forward semantics (HF-Accelerate releases offloaded
+        module weights right after the module runs — not a capacity
+        eviction). The device mirror still frees the slot."""
+        if key in self.resident:
+            del self.resident[key]
+            self._on_evict(key)
+            return True
+        return False
 
     def unpin(self, key: ExpertKey, t: float = 0.0) -> List[ExpertKey]:
         """Unpin `key`; if the cache had grown past capacity while all
@@ -156,9 +197,18 @@ class CacheState:
             if victim is None:
                 break
             del self.resident[victim]
+            self._on_evict(victim)
             self.events.append(CacheEvent("evict", victim, t))
             evicted.append(victim)
         return evicted
+
+    def rescale(self, new_capacity: int) -> None:
+        """Raise the residency bound (batch-size change, policy swap).
+        Grow-only: shrinking would need an eviction sweep no caller wants
+        implicitly; ExpertResidency also regrows its device pools here."""
+        assert new_capacity >= self.capacity, \
+            f"rescale is grow-only ({self.capacity} -> {new_capacity})"
+        self.capacity = new_capacity
 
     @property
     def peak_bytes(self) -> int:
@@ -170,41 +220,143 @@ class CacheState:
         return self.hits / tot if tot else 0.0
 
 
-class DeviceExpertCache:
-    """Real device-side cache backed by CacheState bookkeeping.
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _pool_write(pool: jax.Array, slot: jax.Array, slab: jax.Array
+                ) -> jax.Array:
+    """In-place (donated) host->device write of one expert slab into its
+    pool slot. Donation makes the at-set reuse the pool's buffer — no
+    allocator churn per fetch — while async dispatch lets the copy overlap
+    compute dispatched afterwards."""
+    return pool.at[slot].set(slab)
 
-    prefetch() issues jax.device_put (async dispatch — returns immediately;
-    the transfer overlaps subsequently dispatched compute, the TPU analogue
-    of the paper's communication stream).
+
+class ExpertResidency(CacheState):
+    """THE ledger fused with the device expert buffers (one mechanism).
+
+    The scheduler shares this object by reference (`sched.cache is
+    engine.cache`) and performs all plan-time ledger ops on it; the
+    `_on_admit`/`_on_evict` overrides mirror every decision into a fixed
+    slot pool:
+
+      * pools: stacked ``w1/w3: [pool_capacity, d, de]``,
+        ``w2: [pool_capacity, de, d]`` device arrays allocated ONCE.
+      * slot_of: ExpertKey -> pool slot for every resident expert
+        (invariant: ``set(slot_of) == set(resident)`` at all times).
+      * admission pops a free slot; eviction pushes it back — O(1), no
+        device allocation on the steady-state path.
+
+    Transfer issuance is decoupled from admission so the engine keeps the
+    paper's overlap structure: `prefetch(key)` performs the actual
+    host->device copy for an already-admitted key at the point the engine
+    dispatches it (between compute dispatches); `slot(key)` is the
+    use-time sync point — it issues any still-pending copy and returns the
+    slot index for the jitted slot-indexed expert kernels.
+
+    If a must-have admission grows an all-pinned ledger past the pool (the
+    engines size `capacity` so this never happens — asserted in
+    tests/test_residency.py), the pool regrows rather than corrupting a
+    live slot; `regrow_events` counts those.
     """
 
     def __init__(self, store: HostExpertStore, capacity: int):
+        super().__init__(capacity, store.bytes_per_expert)
         self.store = store
-        self.state = CacheState(capacity, store.bytes_per_expert)
-        self._dev: Dict[ExpertKey, Tuple[jax.Array, ...]] = {}
+        w1, w3, w2 = next(iter(store.weights.values()))
+        self.pool_capacity = capacity
+        self._pools: Dict[str, jax.Array] = {
+            "w1": jnp.zeros((capacity,) + w1.shape, w1.dtype),
+            "w3": jnp.zeros((capacity,) + w3.shape, w3.dtype),
+            "w2": jnp.zeros((capacity,) + w2.shape, w2.dtype),
+        }
+        self.slot_of: Dict[ExpertKey, int] = {}
+        self._free: List[int] = list(range(capacity))[::-1]
+        self._loaded: Set[ExpertKey] = set()
         self.transfer_log: List[Tuple[ExpertKey, float]] = []
+        self.regrow_events = 0
 
-    def prefetch(self, key: ExpertKey, pinned: bool = True) -> bool:
-        """Returns True on hit (already resident)."""
-        t = time.perf_counter()
-        if self.state.lookup(key, t):
+    # -- ledger -> device mirroring -----------------------------------------
+    def _on_admit(self, key: ExpertKey) -> None:
+        if not self._free:
+            # all-pinned ledger growth: never corrupt a live slot
+            self._regrow(self.pool_capacity + max(1, self.pool_capacity // 2))
+        self.slot_of[key] = self._free.pop()
+
+    def _on_evict(self, key: ExpertKey) -> None:
+        slot = self.slot_of.pop(key, None)
+        if slot is not None:
+            self._free.append(slot)
+            self._loaded.discard(key)
+
+    def _regrow(self, new_pool_capacity: int) -> None:
+        grown = new_pool_capacity - self.pool_capacity
+        for name, pool in self._pools.items():
+            pad = jnp.zeros((grown,) + pool.shape[1:], pool.dtype)
+            self._pools[name] = jnp.concatenate([pool, pad], axis=0)
+        self._free.extend(range(self.pool_capacity, new_pool_capacity))
+        self.pool_capacity = new_pool_capacity
+        self.regrow_events += 1
+
+    def rescale(self, new_capacity: int) -> None:
+        super().rescale(new_capacity)
+        if new_capacity > self.pool_capacity:
+            self._regrow(new_capacity)
+            self.regrow_events -= 1  # provisioning, not an overflow event
+
+    # -- device transfers ----------------------------------------------------
+    def prefetch(self, key: ExpertKey) -> bool:
+        """Issue the host->device copy for an already-admitted key (async
+        dispatch: returns immediately, the DMA overlaps compute dispatched
+        after it — the TPU analogue of the paper's communication stream).
+        Returns True if the key was already loaded; no-op (False) for keys
+        the ledger declined (speculative admit into an all-pinned cache)."""
+        slot = self.slot_of.get(key)
+        if slot is None:
+            return False
+        if key in self._loaded:
             return True
-        for victim in self.state.admit(key, t, pinned):
-            self._dev.pop(victim, None)
-        if not self.state.contains(key):
-            return False  # speculative admit declined: nothing transferred
-        host = self.store.get(key)
-        self._dev[key] = tuple(jax.device_put(a) for a in host)
-        self.transfer_log.append((key, t))
+        w1, w3, w2 = self.store.get(key)
+        s = jnp.int32(slot)
+        self._pools["w1"] = _pool_write(self._pools["w1"], s,
+                                        jax.device_put(w1))
+        self._pools["w3"] = _pool_write(self._pools["w3"], s,
+                                        jax.device_put(w3))
+        self._pools["w2"] = _pool_write(self._pools["w2"], s,
+                                        jax.device_put(w2))
+        self._loaded.add(key)
+        self.transfer_log.append((key, time.perf_counter()))
         return False
 
+    def slot(self, key: ExpertKey) -> int:
+        """Use-time access: slot index of a resident key, issuing its copy
+        if still pending. A non-resident key is a scheduler/engine bug; the
+        correction admit below records honest ledger events, so the
+        engine-vs-simulator parity tests surface it loudly instead of a
+        silent re-fetch masking it."""
+        if key not in self.slot_of:
+            self.admit(key, time.perf_counter(), pinned=True)
+        self.prefetch(key)
+        return self.slot_of[key]
+
+    @property
+    def pools(self) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """Current (w1, w3, w2) slot-pool arrays. Re-read after any
+        prefetch/slot call: each write produces a fresh array object
+        (donation reuses the buffer underneath)."""
+        return self._pools["w1"], self._pools["w3"], self._pools["w2"]
+
     def get(self, key: ExpertKey) -> Tuple[jax.Array, ...]:
-        if key not in self._dev:  # miss on use = correction fetch (sync point)
-            self.prefetch(key)
-        self.state.touch(key)
-        return self._dev[key]
+        """Slot-sliced (w1, w3, w2) views for one expert (compat/testing
+        path; the engines pass pools + slot index into jitted kernels)."""
+        s = self.slot(key)
+        return tuple(self._pools[n][s] for n in ("w1", "w3", "w2"))
 
     def wait(self, key: ExpertKey) -> None:
         """Sync point: block until the expert's weights are on device."""
-        for a in self._dev[key]:
-            a.block_until_ready()
+        self.slot(key)
+        for p in self._pools.values():
+            p.block_until_ready()
+
+    @property
+    def device_bytes(self) -> int:
+        """Actual expert HBM footprint — the fixed pool allocation."""
+        return sum(p.nbytes for p in self._pools.values())

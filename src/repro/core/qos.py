@@ -18,9 +18,10 @@ gaps — which chunking bounds and monolithic prefill blows through.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import enum
-from typing import Dict, List, Optional, Sequence
+from typing import Deque, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -72,39 +73,148 @@ def percentile_report(samples: Sequence[float],
     return {f"p{int(q)}": float(np.percentile(a, q)) for q in qs}
 
 
+class P2Quantile:
+    """Streaming quantile estimator (P^2 algorithm, Jain & Chlamtac 1985).
+
+    Five markers, O(1) memory and update cost, no samples retained — the
+    piece that lets a days-long serving process report p50/p99 inter-token
+    gaps over its WHOLE lifetime while the ledger itself only keeps a
+    bounded window of raw samples.
+    """
+
+    def __init__(self, q: float):
+        assert 0.0 < q < 1.0
+        self.q = q
+        self.count = 0
+        self._init: List[float] = []          # first five observations
+        self._h: List[float] = []             # marker heights
+        self._n: List[float] = []             # marker positions (1-based)
+        self._np: List[float] = []            # desired positions
+        self._dn = [0.0, q / 2, q, (1 + q) / 2, 1.0]
+
+    def update(self, x: float) -> None:
+        self.count += 1
+        if len(self._init) < 5:
+            self._init.append(x)
+            if len(self._init) == 5:
+                self._h = sorted(self._init)
+                self._n = [1.0, 2.0, 3.0, 4.0, 5.0]
+                q = self.q
+                self._np = [1.0, 1 + 2 * q, 1 + 4 * q, 3 + 2 * q, 5.0]
+            return
+        h, n = self._h, self._n
+        if x < h[0]:
+            h[0] = x
+            k = 0
+        elif x >= h[4]:
+            h[4] = x
+            k = 3
+        else:
+            k = next(i for i in range(4) if h[i] <= x < h[i + 1])
+        for i in range(k + 1, 5):
+            n[i] += 1
+        for i in range(5):
+            self._np[i] += self._dn[i]
+        for i in (1, 2, 3):
+            d = self._np[i] - n[i]
+            if (d >= 1 and n[i + 1] - n[i] > 1) or \
+                    (d <= -1 and n[i - 1] - n[i] < -1):
+                d = 1.0 if d > 0 else -1.0
+                # parabolic (P^2) marker height update; linear fallback
+                # when the parabola would break marker monotonicity
+                hp = h[i] + d / (n[i + 1] - n[i - 1]) * (
+                    (n[i] - n[i - 1] + d) * (h[i + 1] - h[i])
+                    / (n[i + 1] - n[i])
+                    + (n[i + 1] - n[i] - d) * (h[i] - h[i - 1])
+                    / (n[i] - n[i - 1]))
+                if not h[i - 1] < hp < h[i + 1]:
+                    j = i + int(d)
+                    hp = h[i] + d * (h[j] - h[i]) / (n[j] - n[i])
+                h[i] = hp
+                n[i] += d
+
+    def value(self) -> float:
+        if self.count == 0:
+            return float("nan")
+        if len(self._init) < 5:
+            return float(np.percentile(self._init, self.q * 100))
+        return self._h[2]
+
+
 class TBTLedger:
     """Per-request inter-token-gap (time-between-tokens) ledger.
 
     `observe(rid, t)` marks request `rid` emitting a token at wall time `t`
     and records the gap since its previous token; `close(rid)` forgets a
-    finished request. The max/p99 of these gaps is the stall metric chunked
-    prefill bounds (benchmarks/bench_stall.py): a monolithic prefill of S
-    tokens freezes every in-flight decoder for the whole prefill, which
-    shows up here as a gap of ~ S * prefill_per_token.
+    finished request's baseline. The max/p99 of these gaps is the stall
+    metric chunked prefill bounds (benchmarks/bench_stall.py): a monolithic
+    prefill of S tokens freezes every in-flight decoder for the whole
+    prefill, which shows up here as a gap of ~ S * prefill_per_token.
+
+    Retention: raw gap samples live in bounded deques (`window` overall,
+    `per_rid_window` per request), and the per-request dict itself is
+    bounded — `close(rid)` enrolls the request in a `closed_window`-deep
+    FIFO whose evictees lose their `by_rid` entry — so a long-running
+    server leaks neither samples nor per-request deques. Lifetime p50/p99
+    survive eviction via streaming P^2 sketches and the lifetime max/count
+    as scalars. Passing None for a window keeps that dimension unbounded
+    (exact, benchmark mode).
     """
 
-    def __init__(self):
+    def __init__(self, window: Optional[int] = 8192,
+                 per_rid_window: Optional[int] = 1024,
+                 closed_window: Optional[int] = 512,
+                 sketch_qs: Sequence[float] = (50, 99)):
         self._last: Dict[int, float] = {}
-        self.gaps: List[float] = []              # all gaps, emission order
-        self.by_rid: Dict[int, List[float]] = {}
+        self.gaps: Deque[float] = collections.deque(maxlen=window)
+        self.by_rid: Dict[int, Deque[float]] = {}
+        self._per_rid_window = per_rid_window
+        self._closed: Deque[int] = collections.deque()
+        self._closed_window = closed_window
+        self.sketches = {q: P2Quantile(q / 100.0) for q in sketch_qs}
+        self.total_gaps = 0
+        self._max = 0.0
 
     def observe(self, rid: int, t: float) -> None:
         last = self._last.get(rid)
         if last is not None:
             gap = t - last
             self.gaps.append(gap)
-            self.by_rid.setdefault(rid, []).append(gap)
+            self.by_rid.setdefault(
+                rid, collections.deque(maxlen=self._per_rid_window)
+            ).append(gap)
+            for sk in self.sketches.values():
+                sk.update(gap)
+            self.total_gaps += 1
+            self._max = max(self._max, gap)
         self._last[rid] = t
 
     def close(self, rid: int) -> None:
+        """Forget a finished request's baseline; its gap history survives
+        for the `closed_window` most recently closed requests, then the
+        whole per-request deque is dropped (the dict itself is bounded,
+        not just each deque)."""
         self._last.pop(rid, None)
+        if self._closed_window is None:
+            return
+        if rid in self.by_rid:
+            self._closed.append(rid)
+        while len(self._closed) > self._closed_window:
+            self.by_rid.pop(self._closed.popleft(), None)
 
     def max_gap(self) -> float:
-        return max(self.gaps) if self.gaps else 0.0
+        """Lifetime maximum gap (scalar — survives window eviction)."""
+        return self._max
 
     def report(self, qs: Sequence[float] = (50, 99)) -> Dict[str, float]:
+        """Exact percentiles over the retained window, plus lifetime
+        `max`/`n` and `p<q>_stream` P^2 estimates over everything ever
+        observed (identical to the window stats until eviction starts)."""
         rep = percentile_report(self.gaps, qs)
         rep["max"] = self.max_gap()
+        rep["n"] = float(self.total_gaps)
+        for q, sk in self.sketches.items():
+            rep[f"p{int(q)}_stream"] = sk.value()
         return rep
 
 
@@ -148,6 +258,22 @@ class LatencyModel:
 
     def predict_prefill(self, n_tokens: int) -> float:
         return n_tokens * self.prefill_per_token
+
+    def suggest_chunk(self, tbt_slo: float, floor: int = 1,
+                      ceiling: int = 4096) -> int:
+        """Largest prefill chunk (tokens) such that one chunk of prefill
+        plus one batched decode step fits the inter-token-gap target:
+        ``chunk * prefill_per_token + decode_step <= tbt_slo``. This is the
+        chunk-size auto-tuner behind ``prefill_budget="auto"``
+        (serving/batching.py): as the EWMA model tracks the live engine,
+        the budget adapts instead of being a hand-chosen constant. Clamped
+        to [floor, ceiling]; an unmeetable SLO degrades to `floor` (maximal
+        chunking) rather than stalling prefill entirely."""
+        room = tbt_slo - self.decode_step
+        if room <= 0:
+            return floor
+        chunk = int(room / max(self.prefill_per_token, 1e-12))
+        return int(np.clip(chunk, floor, ceiling))
 
 
 class AdmissionController:

@@ -1,8 +1,11 @@
 """Phase-specialized expert scheduling policies (paper §V + baselines §VI-A).
 
-Four policies, each owning a CacheState so hit/miss/eviction/peak-memory
+Four policies, each driving ONE CacheState so hit/miss/eviction/peak-memory
 behaviour is identical between the live serving engine and the discrete-event
-simulator:
+simulator. The engine passes its `ExpertResidency` (core/cache.py) as the
+shared `state` — scheduler and device buffers then share a single ledger by
+reference, every plan-time admit/evict/unpin landing symmetrically on device
+memory; the simulator omits `state` and gets a plain ledger-only CacheState:
 
   * ODF  — On-Demand Fetch (HF-Accelerate-style): fetch activated experts
            only after gate selection, serial on the critical path.
@@ -20,7 +23,7 @@ declarative plans the engine executes and the simulator times.
 Decode plans accept multi-request selections (paper §V generalized to B>1):
 `decode_plan(layer, selections)` takes either one request's [k] expert ids or
 a sequence of per-request id lists; nested selections are unioned in
-first-appearance order before cache bookkeeping, so a shared DeviceExpertCache
+first-appearance order before cache bookkeeping, so the shared ExpertResidency
 under continuous batching fetches each distinct expert once per step and the
 hit/miss ledger counts distinct experts, not per-request duplicates.
 """
@@ -73,16 +76,58 @@ def union_selection(selected) -> List[int]:
     return out
 
 
+def default_capacity(name: str, n_layers: int, n_experts: int, top_k: int,
+                     batch: int = 1) -> int:
+    """Policy-default residency capacity (single source of truth; the engine
+    uses it to size the ExpertResidency slot pool BEFORE constructing the
+    scheduler that will share it).
+
+    batch: max concurrent decode requests the cache must absorb per step."""
+    name = name.lower()
+    if name == "odf":
+        return 2 * top_k * batch
+    if name == "lfp":
+        # staging is per-layer (all E experts), independent of batch size
+        return 2 * n_experts
+    if name == "mif":
+        # MoE-Infinity holds a large activation-aware cache (Table II shows
+        # its footprint is by far the largest of the compared systems)
+        return max(4 * top_k * batch, int(0.6 * n_layers * n_experts))
+    if name in ("duo", "duoserve"):
+        # must cover one batched step's churn: the selected union
+        # (<= batch*k) plus the widened next-layer prefetch (<= batch*k)
+        return 2 * top_k * batch
+    if name in ("duo+", "duo_plus"):
+        # Beyond-paper variant (EXPERIMENTS.md §Perf): same dual-phase
+        # scheduling, but the decode cache retains hot experts across steps.
+        # Capacity must exceed one step's churn (selected + mispredicted
+        # prefetches across all layers, ~1.5*L*k) or LRU evicts everything
+        # before reuse; at that size temporal locality turns repeats into
+        # zero-byte hits (measured: misses -5.4x, prefetch transfers -11x on
+        # Mixtral) at ~half of MIF's footprint.
+        return max(2 * top_k * batch,
+                   3 * n_layers * top_k // 2 + 2 * top_k * batch)
+    raise KeyError(name)
+
+
 class BaseScheduler:
     name = "base"
     uses_predictor = False
 
     def __init__(self, n_layers: int, n_experts: int, top_k: int,
-                 bytes_per_expert: int, capacity: int):
+                 bytes_per_expert: int, capacity: int,
+                 state: Optional[CacheState] = None):
         self.L = n_layers
         self.E = n_experts
         self.k = top_k
-        self.cache = CacheState(capacity, bytes_per_expert)
+        if state is not None:
+            # shared-ledger mode: the engine's ExpertResidency IS the cache;
+            # grow it if this policy needs more room than it was built with
+            if capacity > state.capacity:
+                state.rescale(capacity)
+            self.cache = state
+        else:
+            self.cache = CacheState(capacity, bytes_per_expert)
         self._next_prefetched: Dict[int, List[int]] = {}
         self.decode_hits = 0
         self.decode_misses = 0
@@ -148,9 +193,11 @@ class ODFScheduler(BaseScheduler):
 
     def __init__(self, n_layers, n_experts, top_k, bytes_per_expert,
                  capacity: Optional[int] = None, stateless: bool = True,
-                 batch: int = 1):
+                 batch: int = 1, state=None):
         super().__init__(n_layers, n_experts, top_k, bytes_per_expert,
-                         capacity or 2 * top_k * batch)
+                         capacity or default_capacity(
+                             "odf", n_layers, n_experts, top_k, batch),
+                         state=state)
         self.stateless = stateless
 
     def prefill_plan(self, layer, active):
@@ -162,9 +209,11 @@ class ODFScheduler(BaseScheduler):
     def decode_plan(self, layer, selected, features=None):
         selected = union_selection(selected)
         if self.stateless:
-            # accelerate frees offloaded weights after each module forward
+            # accelerate frees offloaded weights after each module forward;
+            # drop() routes the free through the residency hooks so the
+            # device slot is released too (no event: not a capacity evict)
             for key in [k for k in self.cache.resident if k[0] != layer]:
-                del self.cache.resident[key]
+                self.cache.drop(key)
         hits, misses = self._split_hits(layer, selected)
         self.end_layer(layer)
         return DecodePlan(layer, hits, misses, prefetch_next=[], predicted=[])
@@ -176,10 +225,11 @@ class LFPScheduler(BaseScheduler):
     name = "lfp"
 
     def __init__(self, n_layers, n_experts, top_k, bytes_per_expert,
-                 capacity: Optional[int] = None, batch: int = 1):
-        # staging is per-layer (all E experts), independent of batch size
+                 capacity: Optional[int] = None, batch: int = 1, state=None):
         super().__init__(n_layers, n_experts, top_k, bytes_per_expert,
-                         capacity or 2 * n_experts)
+                         capacity or default_capacity(
+                             "lfp", n_layers, n_experts, top_k, batch),
+                         state=state)
 
     def prefill_plan(self, layer, active):
         fetches = self._fetch_missing(layer, range(self.E))
@@ -206,12 +256,11 @@ class MIFScheduler(BaseScheduler):
 
     def __init__(self, n_layers, n_experts, top_k, bytes_per_expert,
                  stats: TraceStats, capacity: Optional[int] = None,
-                 batch: int = 1):
-        # MoE-Infinity holds a large activation-aware cache (Table II shows
-        # its footprint is by far the largest of the compared systems)
-        cap = capacity or max(4 * top_k * batch,
-                              int(0.6 * n_layers * n_experts))
-        super().__init__(n_layers, n_experts, top_k, bytes_per_expert, cap)
+                 batch: int = 1, state=None):
+        cap = capacity or default_capacity("mif", n_layers, n_experts,
+                                           top_k, batch)
+        super().__init__(n_layers, n_experts, top_k, bytes_per_expert, cap,
+                         state=state)
         self.stats = stats
 
     def _prior(self, layer: int) -> List[int]:
@@ -259,11 +308,11 @@ class DuoServeScheduler(BaseScheduler):
 
     def __init__(self, n_layers, n_experts, top_k, bytes_per_expert,
                  predictor=None, state_constructor=None,
-                 capacity: Optional[int] = None, batch: int = 1):
-        # capacity must cover one batched step's churn: the selected union
-        # (<= batch*k) plus the widened next-layer prefetch (<= batch*k)
+                 capacity: Optional[int] = None, batch: int = 1, state=None):
         super().__init__(n_layers, n_experts, top_k, bytes_per_expert,
-                         capacity or 2 * top_k * batch)
+                         capacity or default_capacity(
+                             "duo", n_layers, n_experts, top_k, batch),
+                         state=state)
         self.predictor = predictor
         self.state_constructor = state_constructor
         self._path: List[np.ndarray] = []
@@ -313,35 +362,34 @@ def make_scheduler(name: str, n_layers: int, n_experts: int, top_k: int,
                    bytes_per_expert: int, *, stats: Optional[TraceStats] = None,
                    predictor=None, state_constructor=None,
                    capacity: Optional[int] = None,
-                   batch: int = 1) -> BaseScheduler:
+                   batch: int = 1, state: Optional[CacheState] = None
+                   ) -> BaseScheduler:
     """batch: max concurrent decode requests the cache must absorb per
-    step (continuous batching); scales the policy default capacities."""
+    step (continuous batching); scales the policy default capacities.
+    state: a shared CacheState/ExpertResidency to drive instead of
+    constructing a private ledger — the engine passes its residency here so
+    exactly ONE ledger exists per engine; the simulator omits it."""
     name = name.lower()
     if name == "odf":
         return ODFScheduler(n_layers, n_experts, top_k, bytes_per_expert,
-                            capacity, batch=batch)
+                            capacity, batch=batch, state=state)
     if name == "lfp":
         return LFPScheduler(n_layers, n_experts, top_k, bytes_per_expert,
-                            capacity, batch=batch)
+                            capacity, batch=batch, state=state)
     if name == "mif":
         assert stats is not None, "MIF needs TraceStats"
         return MIFScheduler(n_layers, n_experts, top_k, bytes_per_expert,
-                            stats, capacity, batch=batch)
+                            stats, capacity, batch=batch, state=state)
     if name in ("duo", "duoserve"):
         return DuoServeScheduler(n_layers, n_experts, top_k, bytes_per_expert,
                                  predictor, state_constructor, capacity,
-                                 batch=batch)
+                                 batch=batch, state=state)
     if name in ("duo+", "duo_plus"):
-        # Beyond-paper variant (EXPERIMENTS.md §Perf): same dual-phase
-        # scheduling, but the decode cache retains hot experts across steps.
-        # Capacity must exceed one step's churn (selected + mispredicted
-        # prefetches across all layers, ~1.5*L*k) or LRU evicts everything
-        # before reuse; at that size temporal locality turns repeats into
-        # zero-byte hits (measured: misses -5.4x, prefetch transfers -11x on
-        # Mixtral) at ~half of MIF's footprint.
+        # see default_capacity("duo+"): cross-step retention variant
         return DuoServeScheduler(n_layers, n_experts, top_k, bytes_per_expert,
                                  predictor, state_constructor,
-                                 capacity or max(2 * top_k * batch,
-                                                 3 * n_layers * top_k // 2
-                                                 + 2 * top_k * batch))
+                                 capacity or default_capacity(
+                                     "duo+", n_layers, n_experts, top_k,
+                                     batch),
+                                 state=state)
     raise KeyError(name)

@@ -18,7 +18,12 @@ constants used for §Roofline are provided by ``HW.tpu_v5e()``.
 
 Policies are the *same objects* the live engine uses (core/scheduler.py), so
 simulated hit rates, fetch orders, and peak residency are exactly the
-engine's.
+engine's. The engine drives the SAME single CacheState ledger that backs its
+device slot pools (core/cache.ExpertResidency shared into the scheduler via
+``make_scheduler(state=...)``); a replay here constructs a plain ledger-only
+CacheState with the engine's capacity and reproduces the identical
+hit/miss/evict event sequence (tests/test_cache_parity.py) — simulated peak
+residency IS the engine's device footprint, not an estimate of it.
 """
 from __future__ import annotations
 

@@ -15,6 +15,12 @@ Operands:
   w1  [E, d, f]   gate proj     w3 [E, d, f] up proj     w2 [E, f, d] down
   out [E, C, d]   f32 accumulated across hidden tiles
 
+The stacked [E, ...] weight layout is exactly the ExpertResidency slot-pool
+layout (core/cache.py: [pool_capacity, d, de] buffers) — `expert_ffn_from_pool`
+runs the kernel straight off the serving engine's resident pools by slot
+index, so the prefill pipeline and the Pallas kernel share one weight-access
+convention.
+
 Grid: (E, f // block_f); the hidden dim is tiled so each expert's working set
 fits VMEM regardless of d_expert (SwiGLU is computed per f-tile and
 down-projected immediately: out += (silu(x@w1_j) * (x@w3_j)) @ w2_j).
@@ -66,3 +72,19 @@ def expert_ffn(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array,
         interpret=interpret,
     )(x, w1, w3, w2)
     return out.astype(x.dtype)
+
+
+def expert_ffn_from_pool(x: jax.Array, w1_pool: jax.Array,
+                         w3_pool: jax.Array, w2_pool: jax.Array,
+                         slots, **kw) -> jax.Array:
+    """Run the streaming expert FFN straight off ExpertResidency slot pools.
+
+    x: [E', C, d] capacity-grouped tokens for E' active experts; slots: [E']
+    pool slot of each active expert (``residency.slot(key)``); w*_pool: the
+    residency's fixed [pool_capacity, ...] buffers. The gather selects only
+    the active experts' slabs, so the kernel's HBM reads stay bounded by the
+    residency capacity — the device-side counterpart of the paper's k-slot
+    cache feeding the two-stream prefill pipeline.
+    """
+    idx = jnp.asarray(slots, jnp.int32)
+    return expert_ffn(x, w1_pool[idx], w3_pool[idx], w2_pool[idx], **kw)

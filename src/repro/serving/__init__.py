@@ -9,9 +9,11 @@ Two front-ends over one execution substrate:
     for new arrivals interleaves with one batched decode step per iteration,
     KV lives in a slot pool with per-request write positions, and each
     step's per-layer expert selections are unioned across the batch before
-    they reach the shared scheduler + DeviceExpertCache (decode-plan union
-    semantics: one fetch per distinct expert per step, hit/miss accounting
-    over distinct experts).
+    they reach the ONE shared scheduler/ExpertResidency ledger (decode-plan
+    union semantics: one fetch per distinct expert per step, hit/miss
+    accounting over distinct experts). Expert weights live in the
+    residency's fixed slot-pool device buffers — expert HBM is bounded by
+    ``capacity * bytes_per_expert`` at every step.
 
 Both produce ``RequestResult`` records; at temperature 0 they emit identical
 tokens for the same prompt (batched decode is bit-exact per row).

@@ -17,18 +17,26 @@ load, the regime its TTFT/E2E SLO claims actually target:
     different positions decode together via ``self_attn_decode_batched``.
   * Chunked, stall-free prefill (paper §III phase disparity): a long prompt
     no longer freezes in-flight decoders for its whole prefill. Admitted
-    requests sit in state ``prefilling``; each iteration runs one
-    token-budget chunk through ``EngineCore.prefill_chunk`` (the chunk
+    requests sit in state ``prefilling``; each iteration spends the step's
+    token budget on chunks through ``EngineCore.prefill_chunk`` (the chunk
     attends over the slot's already-written KV prefix and appends its own
     K/V), so inter-token gaps for decoders stay bounded by one chunk + one
-    decode step instead of a full prefill. Per-chunk expert activations go
-    through the same per-layer ``prefill_plan`` path, sharing the expert
-    cache with decode. ``prefill_budget=None`` preserves the monolithic
-    behaviour. The ``TBTLedger`` (core/qos.py) records per-request
-    inter-token gaps; ``benchmarks/bench_stall.py`` measures the bound.
+    decode step instead of a full prefill. The budget is shared FAIRLY:
+    ``prefill_fairness="rr"`` (default) rotates the per-step budget across
+    ALL prefilling requests so one long prompt cannot starve later
+    arrivals' TTFT; ``"fifo"`` restores the head-of-line discipline.
+    ``prefill_budget="auto"`` derives the budget
+    each step from the live ``LatencyModel`` so one chunk + one batched
+    decode step fits the ``tbt_slo`` target (core/qos.py
+    ``suggest_chunk``). Per-chunk expert activations go through the same
+    per-layer ``prefill_plan`` path, sharing the expert residency with
+    decode. ``prefill_budget=None`` preserves the monolithic behaviour.
+    The ``TBTLedger`` (core/qos.py) records per-request inter-token gaps
+    in bounded windows with streaming P^2 percentile sketches;
+    ``benchmarks/bench_stall.py`` measures the bound.
   * Decode-phase expert scheduling is shared: per-step, per-layer expert
     selections of all B requests are unioned (first-appearance order) and
-    handed to ONE scheduler/DeviceExpertCache pair (paper §V generalized to
+    handed to ONE scheduler/ExpertResidency ledger (paper §V generalized to
     B>1) — each distinct expert is fetched at most once per step, and the
     ExpertMLP prediction stream prefetches layer l+1 for the whole batch.
 
@@ -44,7 +52,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional, Union
 
 import jax.numpy as jnp
 import numpy as np
@@ -118,6 +126,18 @@ class Request:
             hits=self.hits, misses=self.misses)
 
 
+def parse_prefill_budget(v: Union[int, str, None]) -> Union[int, str, None]:
+    """CLI-string form of `prefill_budget`: int tokens, "auto"
+    (LatencyModel-tuned, needs tbt_slo), or None/"none" for monolithic.
+    Shared by the benchmark/example drivers so the syntax stays in one
+    place."""
+    if v is None or v == "none":
+        return None
+    if v == "auto":
+        return "auto"
+    return int(v)
+
+
 class RequestQueue:
     """FIFO arrival queue with SLO-aware admission (core/qos.py).
 
@@ -175,27 +195,50 @@ class BatchedServingEngine(EngineCore):
     max_batch: concurrent in-flight requests (= KV slots).
     max_seq:   per-slot KV capacity W (prompt + generated tokens must fit).
     prefill_budget: max prompt tokens of prefill work per step(); admitted
-        requests prefill in chunks of at most this many tokens (state
-        'prefilling'), interleaved with the batched decode step so decoder
-        inter-token gaps stay bounded. None = monolithic (each admitted
-        request prefills fully inside the step that admits it).
+        requests prefill in chunks under this budget (state 'prefilling'),
+        interleaved with the batched decode step so decoder inter-token
+        gaps stay bounded. None = monolithic (each admitted request
+        prefills fully inside the step that admits it). "auto" = derive
+        the budget each step from the live LatencyModel so one chunk + one
+        batched decode step fits `tbt_slo` (requires tbt_slo).
+    prefill_fairness: "rr" (default) rotates the per-step budget across
+        all prefilling requests (one chunk shape, fair progress over
+        steps); "fifo" always spends the budget head-of-line.
+    tbt_slo: target inter-token-gap bound (seconds) for the auto budget.
+    finished_window: retain only the most recent N finished requests
+        (None = unbounded; set for long-running servers so full
+        per-request traces don't accumulate forever).
     """
 
     def __init__(self, cfg, params, policy: str = "duo", *,
                  max_batch: int = 4, max_seq: int = 128,
-                 prefill_budget: Optional[int] = None,
+                 prefill_budget: Union[int, str, None] = None,
+                 prefill_fairness: str = "rr",
+                 tbt_slo: Optional[float] = None,
+                 finished_window: Optional[int] = None,
+                 tbt_window: Optional[int] = 8192,
                  queue: Optional[RequestQueue] = None,
                  stats=None, predictor=None, cache_capacity=None,
                  temperature: float = 0.0, sample_seed: int = 0):
         super().__init__(cfg, params, policy, stats=stats,
                          predictor=predictor, cache_capacity=cache_capacity,
                          temperature=temperature, sample_seed=sample_seed,
-                         sched_batch=max_batch)
+                         sched_batch=max_batch,
+                         prefill_chunk=(prefill_budget
+                                        if isinstance(prefill_budget, int)
+                                        else None))
         self.max_batch = max_batch
         self.W = max_seq
-        assert prefill_budget is None or prefill_budget >= 1, \
-            "prefill_budget must be None (monolithic) or >= 1 token"
+        if prefill_budget == "auto":
+            assert tbt_slo is not None and tbt_slo > 0, \
+                'prefill_budget="auto" needs a tbt_slo target'
+        else:
+            assert prefill_budget is None or prefill_budget >= 1, \
+                "prefill_budget must be None, 'auto', or >= 1 token"
+        assert prefill_fairness in ("rr", "fifo")
         self.prefill_budget = prefill_budget
+        self.prefill_fairness = prefill_fairness
+        self.tbt_slo = tbt_slo
         self.queue = RequestQueue() if queue is None else queue
         self.sample_seed = sample_seed
         hkv, hd = cfg.n_kv_heads, cfg.hd
@@ -204,13 +247,28 @@ class BatchedServingEngine(EngineCore):
         self._V = [jnp.zeros_like(self._K[l]) for l in range(self.L)]
         self._slot_pos = np.full((max_batch, max_seq), -1, np.int32)
         self._free: List[int] = list(range(max_batch))[::-1]
-        self.prefilling: List[Request] = []   # FIFO, state='prefilling'
+        self.prefilling: List[Request] = []   # state='prefilling'
         self.running: List[Request] = []
-        self.finished: List[Request] = []
-        self.tbt = TBTLedger()
+        self.finished: Deque[Request] = collections.deque(
+            maxlen=finished_window)
+        self.tbt = TBTLedger(window=tbt_window)
         self._next_rid = 0
+        self._pf_rr = 0   # round-robin rotation cursor across steps
         self.step_count = 0
         self.decode_batch_hist: List[int] = []
+
+    @property
+    def chunked(self) -> bool:
+        return self.prefill_budget is not None
+
+    def _current_budget(self) -> Optional[int]:
+        """Resolve this step's prefill token budget (auto mode consults the
+        live EWMA cost model; core/qos.py LatencyModel.suggest_chunk)."""
+        if self.prefill_budget is None:
+            return None
+        if self.prefill_budget == "auto":
+            return self.queue.admission.model.suggest_chunk(self.tbt_slo)
+        return self.prefill_budget
 
     # -- submission ---------------------------------------------------------
     def submit(self, prompt: np.ndarray, max_new: int = 16, *,
@@ -243,13 +301,13 @@ class BatchedServingEngine(EngineCore):
         newly = self.queue.pop_admissible(
             now, limit=len(self._free), backlog_tokens=backlog,
             running_batch=len(self.running),
-            chunk_budget=self.prefill_budget)
+            chunk_budget=self._current_budget())
         for req in newly:
             slot = self._free.pop()
             req.slot = slot
             req.t_start = now
             self._slot_pos[slot, :] = -1
-            if self.prefill_budget is not None:
+            if self.chunked:
                 req.state = "prefilling"
                 req.prefill_pos = 0
                 req.active_sets = [set() for _ in range(self.L)]
@@ -279,56 +337,78 @@ class BatchedServingEngine(EngineCore):
             self.running.append(req)
         return newly
 
-    def _prefill_work(self) -> int:
-        """Spend up to `prefill_budget` prompt tokens advancing the FIFO of
-        'prefilling' requests by one chunk each (stall-free interleaving).
+    def _run_prefill_chunk(self, req: Request, C: int) -> None:
+        """Advance one 'prefilling' request by a C-token chunk.
 
-        A chunk runs through `EngineCore.prefill_chunk` directly against the
-        request's KV slot: the chunk attends over the slot's already-written
+        The chunk runs through `EngineCore.prefill_chunk` directly against
+        the request's KV slot: it attends over the slot's already-written
         prefix and appends its own K/V, and the scheduler sees it through
-        the ordinary per-layer `prefill_plan` path. When a request's final
-        chunk completes, its first token is sampled — exactly the token
-        monolithic prefill would have produced — and it joins this same
-        step's decode batch (like a monolithically prefilled arrival).
-        Returns tokens of prefill work done.
+        the ordinary per-layer `prefill_plan` path. When the request's
+        final chunk completes, its first token is sampled — exactly the
+        token monolithic prefill would have produced — and it joins this
+        same step's decode batch (like a monolithically prefilled arrival).
         """
-        if self.prefill_budget is None:
-            return 0  # monolithic mode: prefill happened at admission
-        budget = self.prefill_budget
-        spent = 0
-        while self.prefilling and budget > 0:
-            req = self.prefilling[0]
-            C = min(budget, req.prefill_remaining)
-            t0 = time.perf_counter()
-            slot, start = req.slot, req.prefill_pos
-            stop = start + C
-            final = stop == req.prompt_len
-            logits, req.pf_k, req.pf_v, req.pf_sp, act, _ = \
-                self.prefill_chunk(req.prompt[None, start:stop], start,
-                                   req.pf_k, req.pf_v, req.pf_sp,
-                                   need_logits=final)
+        t0 = time.perf_counter()
+        slot, start = req.slot, req.prefill_pos
+        stop = start + C
+        final = stop == req.prompt_len
+        logits, req.pf_k, req.pf_v, req.pf_sp, act, _ = \
+            self.prefill_chunk(req.prompt[None, start:stop], start,
+                               req.pf_k, req.pf_v, req.pf_sp,
+                               need_logits=final)
+        for l in range(self.L):
+            req.active_sets[l].update(act[l])
+        req.prefill_pos = stop
+        self.queue.admission.model.observe_prefill(
+            C, time.perf_counter() - t0)
+        if final:
+            # one scatter into the slot pool for the whole prompt
             for l in range(self.L):
-                req.active_sets[l].update(act[l])
-            req.prefill_pos = stop
+                self._K[l] = self._K[l].at[slot].set(req.pf_k[l][0])
+                self._V[l] = self._V[l].at[slot].set(req.pf_v[l][0])
+            self._slot_pos[slot] = np.asarray(req.pf_sp[0])
+            req.pf_k = req.pf_v = req.pf_sp = None
+            req.prefill_active = [sorted(s) for s in req.active_sets]
+            req.active_sets = None
+            req.tokens.append(self._sample_req(req, logits[0]))
+            req.t_first = time.perf_counter()
+            self.tbt.observe(req.rid, req.t_first)
+            req.state = "running"
+            self.prefilling.remove(req)
+            self.running.append(req)
+
+    def _prefill_work(self) -> int:
+        """Spend up to this step's prefill budget advancing 'prefilling'
+        requests (stall-free interleaving). Returns tokens of work done.
+
+        Fairness: "fifo" always serves the head request (a long prompt
+        monopolizes prefill until done — a short prompt behind it waits for
+        EVERY earlier prefill to complete). "rr" rotates which prefilling
+        request receives the step's budget, so overlapping prompts make
+        interleaved progress and a short arrival's TTFT is bounded by
+        ~n_prefilling * (len/budget) steps instead of the whole backlog.
+        The budget goes to one request per step (spilling to the next in
+        rotation only when it finishes early) rather than being split —
+        chunk shapes stay constant, so the chunked-prefill kernels compile
+        once per budget, not once per (budget/n) share.
+        benchmarks/bench_stall.py --fairness compares the two."""
+        if not self.chunked:
+            return 0  # monolithic mode: prefill happened at admission
+        budget = self._current_budget()
+        spent = 0
+        if self.prefilling and self.prefill_fairness == "rr":
+            rot = self._pf_rr % len(self.prefilling)
+            self._pf_rr += 1
+            order = self.prefilling[rot:] + self.prefilling[:rot]
+        else:
+            order = list(self.prefilling)  # fifo: head-of-line
+        for req in order:
+            if budget <= 0:
+                break
+            C = min(budget, req.prefill_remaining)
+            self._run_prefill_chunk(req, C)
             spent += C
             budget -= C
-            self.queue.admission.model.observe_prefill(
-                C, time.perf_counter() - t0)
-            if final:
-                # one scatter into the slot pool for the whole prompt
-                for l in range(self.L):
-                    self._K[l] = self._K[l].at[slot].set(req.pf_k[l][0])
-                    self._V[l] = self._V[l].at[slot].set(req.pf_v[l][0])
-                self._slot_pos[slot] = np.asarray(req.pf_sp[0])
-                req.pf_k = req.pf_v = req.pf_sp = None
-                req.prefill_active = [sorted(s) for s in req.active_sets]
-                req.active_sets = None
-                req.tokens.append(self._sample_req(req, logits[0]))
-                req.t_first = time.perf_counter()
-                self.tbt.observe(req.rid, req.t_first)
-                req.state = "running"
-                self.prefilling.pop(0)
-                self.running.append(req)
         return spent
 
     def _sample_req(self, req: Request, logits_row) -> int:
@@ -388,11 +468,15 @@ class BatchedServingEngine(EngineCore):
             for b, r in enumerate(batch):
                 r.hits += len(set(selections[b]) & hit_set)
                 r.misses += len(set(selections[b]) & miss_set)
-            # one pre-gate output per DISTINCT expert across the batch
+            # one pre-gate output per DISTINCT expert across the batch,
+            # each read by slot index out of the shared residency pools
+            # (pools re-read after every slot(): a pending transfer swaps
+            # in a fresh pool array object)
             raw: Dict[int, jnp.ndarray] = {}
             for e in union:
-                w1, w3, w2 = self.cache.get((l, e))
-                raw[e] = self._expert_raw(xn, w1, w3, w2)  # f32 [B, d]
+                eslot = jnp.int32(self.cache.slot((l, e)))
+                raw[e] = self._expert_raw(xn, *self.cache.pools,
+                                          eslot)  # f32 [B, d]
             acc = self._shared(self._moe_dev(l), xn)
             if union:
                 stacked = jnp.stack([raw[e] for e in union])  # [U, B, d]

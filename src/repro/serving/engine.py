@@ -19,18 +19,24 @@ can interleave host->device expert transfers with dispatched computation:
     prefetch while layer l's experts compute.
 
 Routed-expert weights live ONLY in the HostExpertStore (host RAM); the device
-holds non-MoE weights + a k-slot expert cache — the paper's memory model.
+holds non-MoE weights + ONE ``ExpertResidency`` (core/cache.py) — a single
+CacheState ledger fused with fixed slot-pool expert buffers, shared by
+reference with the scheduling policy. Exactly one ledger exists per engine:
+the scheduler's plan-time admits/evicts/unpins ARE the device slot
+allocations/frees, so expert HBM is bounded by ``capacity *
+bytes_per_expert`` at every step (no silently growing device dict), and the
+jitted expert kernels read weights by slot index straight out of the pools.
 The engine records routing traces + cache events; the simulator replays them
 with hardware constants to produce the paper's latency/memory tables.
 
 The module is split into:
 
   * ``EngineCore`` — the shared execution substrate (host store, device
-    residency split, jitted per-layer kernels, scheduler + device cache).
-    Kernels are written batch-agnostic: every decode-side op is row-wise
-    deterministic, so a [B,1,d] batched step reproduces B independent
-    [1,1,d] steps bit-exactly (the invariant the continuous-batching
-    front-end in ``serving/batching.py`` is built on).
+    residency split, jitted per-layer kernels, one scheduler + residency
+    pair). Kernels are written batch-agnostic: every decode-side op is
+    row-wise deterministic, so a [B,1,d] batched step reproduces B
+    independent [1,1,d] steps bit-exactly (the invariant the
+    continuous-batching front-end in ``serving/batching.py`` is built on).
   * ``MoEServingEngine`` — the paper-scope single-request engine.
 """
 from __future__ import annotations
@@ -45,8 +51,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core.cache import DeviceExpertCache, HostExpertStore
-from repro.core.scheduler import BaseScheduler, DuoServeScheduler, make_scheduler
+from repro.core.cache import ExpertResidency, HostExpertStore
+from repro.core.scheduler import (BaseScheduler, DuoServeScheduler,
+                                  default_capacity, make_scheduler)
 from repro.core.state import StateConstructor
 from repro.core.tracer import ExpertsTracer, TraceStats
 from repro.models import layers as L
@@ -104,12 +111,24 @@ class EngineCore:
         self.prefill_chunk_size = prefill_chunk
         self._rng = np.random.default_rng(sample_seed)
         sc = StateConstructor(stats) if stats is not None else None
+        # ONE ledger per engine: the residency is built first, then the
+        # scheduler shares it by reference (sched.cache IS self.cache).
+        # Capacity covers the policy default AND the largest must-have
+        # (pinned) set a single prefill plan can create — every expert the
+        # chunk's tokens activate stays pinned until end_layer — so the
+        # all-pinned growth branch (and a pool regrow) never fires and
+        # expert HBM is a hard capacity*bytes_per_expert bound.
+        pin_bound = self.E if prefill_chunk is None \
+            else min(self.E, prefill_chunk * self.k)
+        cap = cache_capacity or max(
+            default_capacity(policy, self.L, self.E, self.k,
+                             batch=sched_batch), pin_bound)
+        self.cache = ExpertResidency(self.store, capacity=cap)
         self.sched = make_scheduler(
             policy, self.L, self.E, self.k, self.store.bytes_per_expert,
             stats=stats, predictor=predictor, state_constructor=sc,
-            capacity=cache_capacity, batch=sched_batch)
-        self.cache = DeviceExpertCache(
-            self.store, capacity=self.sched.cache.capacity)
+            capacity=cap, batch=sched_batch, state=self.cache)
+        assert self.sched.cache is self.cache, "ledger must be shared"
         self._jit_fns()
 
     # -- jitted per-layer kernels (compiled once; reused for every layer) ----
@@ -153,15 +172,21 @@ class EngineCore:
             return xn, w, ids
 
         @jax.jit
-        def expert_raw(xn, w1, w3, w2):
-            """Pre-gate expert output in f32: [T, d]."""
+        def expert_raw(xn, w1p, w3p, w2p, slot):
+            """Pre-gate expert output in f32: [T, d]. Weights are read by
+            slot index out of the residency's fixed [capacity, ...] pools
+            (the slot arrives as a traced jnp scalar, so one compilation
+            serves every slot)."""
             x2 = xn.reshape(-1, xn.shape[-1])
+            w1 = jax.lax.dynamic_index_in_dim(w1p, slot, keepdims=False)
+            w3 = jax.lax.dynamic_index_in_dim(w3p, slot, keepdims=False)
+            w2 = jax.lax.dynamic_index_in_dim(w2p, slot, keepdims=False)
             h = jax.nn.silu(x2 @ w1) * (x2 @ w3)
             return (h @ w2).astype(jnp.float32)
 
         @jax.jit
-        def expert_apply(xn, w1, w3, w2, gate_w):
-            return (expert_raw(xn, w1, w3, w2)
+        def expert_apply(xn, w1p, w3p, w2p, slot, gate_w):
+            return (expert_raw(xn, w1p, w3p, w2p, slot)
                     * gate_w[:, None]).astype(xn.dtype)
 
         @jax.jit
@@ -197,7 +222,10 @@ class EngineCore:
 
     def _run_experts_prefill(self, l, xn, w, ids, plan):
         """Execute the PrefillPlan: grouped per-expert compute with the
-        policy's fetch schedule (async device_put between dispatches)."""
+        policy's fetch schedule. The plan already admitted its fetches into
+        the shared ledger (slots reserved); `prefetch` here issues the
+        actual host->device copies between compute dispatches, preserving
+        the two-stream overlap, and `slot` is the use-time sync point."""
         acc = self._shared(self._moe_dev(l), xn)
         order = plan.order
         # stage fetches according to the plan
@@ -213,9 +241,9 @@ class EngineCore:
                     self.cache.prefetch((l, order[i + 1]))
                 elif not plan.pipelined:
                     self.cache.prefetch((l, e))
-            w1, w3, w2 = self.cache.get((l, e))
+            eslot = jnp.int32(self.cache.slot((l, e)))
             gate_w = (w * (ids == e)).sum(-1).reshape(-1)
-            acc = acc + self._expert(xn, w1, w3, w2, gate_w)
+            acc = acc + self._expert(xn, *self.cache.pools, eslot, gate_w)
         return acc.reshape(xn.shape)
 
     def _prefill_moe(self, l: int, lp, x):
@@ -388,9 +416,10 @@ class MoEServingEngine(EngineCore):
                     self.cache.wait((l, e))
                 acc = self._shared(self._moe_dev(l), xn)
                 for e in sel:
-                    w1, w3, w2 = self.cache.get((l, e))
+                    eslot = jnp.int32(self.cache.slot((l, e)))
                     gate_w = (w * (ids == e)).sum(-1).reshape(-1)
-                    acc = acc + self._expert(xn, w1, w3, w2, gate_w)
+                    acc = acc + self._expert(xn, *self.cache.pools, eslot,
+                                             gate_w)
                 x = x + acc.reshape(x.shape)
                 # prediction stream: prefetch next layer's predicted experts
                 for e in plan.prefetch_next:

@@ -54,9 +54,13 @@ def test_engine_sim_ledger_parity(setup, policy):
                            temperature=0.0)
     res = eng.serve(prompt, max_new=3)
 
+    # the engine sizes its residency for the worst-case prefill pin set
+    # (max(policy default, E)); replay with the same bound so the ledgers
+    # see identical capacity pressure
     sim_sched = make_scheduler(policy, cfg.n_layers, cfg.n_experts,
                                cfg.top_k, eng.store.bytes_per_expert,
-                               stats=stats)
+                               stats=stats,
+                               capacity=eng.sched.cache.capacity)
     simulate_request(sim_sched, ModelCosts(cfg), HW(), res.prefill_active,
                      res.decode_trace, seq_len=len(prompt))
 

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
-from repro.kernels.expert_ffn import expert_ffn
+from repro.kernels.expert_ffn import expert_ffn, expert_ffn_from_pool
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ssd_scan import ssd_scan
 
@@ -33,6 +33,25 @@ def test_expert_ffn(E, C, d, f, bf, dtype):
     want = ref.expert_ffn_ref(x, w1, w3, w2)
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_expert_ffn_from_pool_matches_direct():
+    """Slot-pool weight access convention: gathering the active experts'
+    slabs out of oversized [pool_capacity, ...] residency buffers is
+    bit-identical to running the kernel on directly stacked weights."""
+    E, C, d, f, cap = 3, 8, 64, 128, 6
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    x = jax.random.normal(ks[0], (E, C, d), jnp.bfloat16)
+    w1p = jax.random.normal(ks[1], (cap, d, f), jnp.bfloat16) * 0.05
+    w3p = jax.random.normal(ks[2], (cap, d, f), jnp.bfloat16) * 0.05
+    w2p = jax.random.normal(ks[3], (cap, f, d), jnp.bfloat16) * 0.05
+    slots = [5, 0, 2]
+    got = expert_ffn_from_pool(x, w1p, w3p, w2p, slots, block_f=64,
+                               interpret=True)
+    want = expert_ffn(x, w1p[jnp.asarray(slots)], w3p[jnp.asarray(slots)],
+                      w2p[jnp.asarray(slots)], block_f=64, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                  np.asarray(want, np.float32))
 
 
 @pytest.mark.parametrize("B,H,Hkv,S,D,bq,bk", [

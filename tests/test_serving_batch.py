@@ -140,6 +140,90 @@ def test_chunked_batched_bit_exact(setup):
         assert r.prefill_active == refs[i].prefill_active
 
 
+def test_rr_fairness_bit_exact_and_interleaved(setup):
+    """Round-robin chunked prefill (default) still emits exactly the
+    monolithic tokens/active-sets per request, and overlapping prefills
+    make interleaved progress (the per-step budget rotates) instead of
+    strict head-of-line."""
+    cfg, params, prompts, refs = setup
+    eng = BatchedServingEngine(cfg, params, policy="duo", max_batch=4,
+                               max_seq=32, temperature=0.0,
+                               prefill_budget=4, prefill_fairness="rr")
+    for p in prompts:
+        eng.submit(p, max_new=MAX_NEW)
+    eng.step()          # admit all 4; budget goes to request 0 this step
+    assert {r.rid: r.prefill_pos for r in eng.prefilling} == \
+        {0: 4, 1: 0, 2: 0, 3: 0}
+    eng.step()          # rotation: request 1's turn
+    assert {r.rid: r.prefill_pos for r in eng.prefilling} == \
+        {0: 4, 1: 4, 2: 0, 3: 0}
+    eng.step()          # request 2 (9 tokens remains prefilling at pos 4)
+    assert {r.rid: r.prefill_pos for r in eng.prefilling} == \
+        {0: 4, 1: 4, 2: 4, 3: 0}
+    finished = sorted(eng.run_until_drained(), key=lambda r: r.rid)
+    assert len(finished) == len(prompts)
+    for i, r in enumerate(finished):
+        np.testing.assert_array_equal(r.result().tokens, refs[i].tokens)
+        assert r.prefill_active == refs[i].prefill_active
+
+
+def test_fifo_fairness_head_of_line(setup):
+    """prefill_fairness='fifo' restores the old discipline: the whole
+    budget goes to the head request."""
+    cfg, params, prompts, refs = setup
+    eng = BatchedServingEngine(cfg, params, policy="duo", max_batch=4,
+                               max_seq=32, temperature=0.0,
+                               prefill_budget=4, prefill_fairness="fifo")
+    for p in prompts:
+        eng.submit(p, max_new=MAX_NEW)
+    eng.step()
+    by_rid = {r.rid: r.prefill_pos for r in eng.prefilling}
+    assert by_rid[0] == 4 and all(v == 0 for k, v in by_rid.items() if k)
+    finished = sorted(eng.run_until_drained(), key=lambda r: r.rid)
+    for i, r in enumerate(finished):
+        np.testing.assert_array_equal(r.result().tokens, refs[i].tokens)
+
+
+def test_auto_budget_tracks_latency_model(setup):
+    """prefill_budget='auto' sizes chunks from the live LatencyModel so one
+    chunk + one decode step fits the TBT SLO — and stays bit-exact."""
+    from repro.core.qos import LatencyModel
+    m = LatencyModel(prefill_per_token=0.01, decode_step=0.05)
+    assert m.suggest_chunk(0.25) == 20          # (0.25 - 0.05) / 0.01
+    assert m.suggest_chunk(0.04) == 1           # unmeetable -> floor
+    assert m.suggest_chunk(1e9, ceiling=64) == 64
+
+    cfg, params, prompts, refs = setup
+    eng = BatchedServingEngine(cfg, params, policy="duo", max_batch=4,
+                               max_seq=32, temperature=0.0,
+                               prefill_budget="auto", tbt_slo=0.5)
+    assert eng.chunked
+    assert eng._current_budget() >= 1
+    for p in prompts:
+        eng.submit(p, max_new=MAX_NEW)
+    finished = sorted(eng.run_until_drained(), key=lambda r: r.rid)
+    assert len(finished) == len(prompts)
+    for i, r in enumerate(finished):
+        np.testing.assert_array_equal(r.result().tokens, refs[i].tokens)
+        assert r.prefill_active == refs[i].prefill_active
+    with pytest.raises(AssertionError):
+        BatchedServingEngine(cfg, params, max_batch=2, max_seq=32,
+                             prefill_budget="auto")   # no tbt_slo
+
+
+def test_finished_window_bounds_retention(setup):
+    """finished_window keeps only the most recent N request records."""
+    cfg, params, prompts, _ = setup
+    eng = BatchedServingEngine(cfg, params, policy="duo", max_batch=2,
+                               max_seq=32, temperature=0.0,
+                               finished_window=2)
+    for p in prompts:
+        eng.submit(p, max_new=2)
+    eng.run_until_drained()
+    assert len(eng.finished) == 2
+    assert [r.rid for r in eng.finished] == [2, 3]   # most recent survive
+
+
 def test_chunked_interleaving_is_stall_free(setup):
     """While a long prompt prefills in chunks, an in-flight decoder keeps
     producing tokens every step — and both stay bit-exact."""
@@ -178,14 +262,73 @@ def test_tbt_ledger_gaps():
     led.observe(1, 2.0)
     led.observe(0, 3.0)
     led.observe(1, 2.25)
-    assert led.by_rid[0] == [0.5, 1.5]
-    assert led.by_rid[1] == [0.25]
+    assert list(led.by_rid[0]) == [0.5, 1.5]
+    assert list(led.by_rid[1]) == [0.25]
     assert led.max_gap() == 1.5
     led.close(0)
     led.observe(0, 9.0)       # fresh baseline after close: no gap recorded
-    assert led.by_rid[0] == [0.5, 1.5]
+    assert list(led.by_rid[0]) == [0.5, 1.5]
     rep = led.report()
     assert rep["max"] == 1.5 and rep["p50"] <= rep["p99"]
+    assert rep["n"] == 3
+
+
+def test_tbt_ledger_windowed_retention():
+    """Raw samples are bounded by the window; lifetime max/count and the
+    streaming sketches survive eviction (ROADMAP retention item)."""
+    led = TBTLedger(window=8, per_rid_window=4)
+    t = 0.0
+    for i in range(100):
+        t += 0.010 if i != 50 else 5.0    # one huge stall mid-stream
+        led.observe(0, t)
+    assert len(led.gaps) == 8             # bounded
+    assert len(led.by_rid[0]) == 4
+    assert led.total_gaps == 99
+    assert led.max_gap() == 5.0           # lifetime max survived eviction
+    rep = led.report()
+    assert rep["n"] == 99
+    # the windowed p50 only sees recent 10ms gaps; the stream sketch saw
+    # everything and stays in the data's range
+    assert rep["p50"] == pytest.approx(0.010, rel=1e-6)
+    assert 0.0 < rep["p50_stream"] <= 5.0
+
+
+def test_tbt_ledger_bounds_closed_request_dict():
+    """close() enrolls requests in a bounded FIFO: the by_rid DICT itself
+    cannot grow without bound as requests churn (the leak is per-request
+    deques accumulating, not just samples within one deque)."""
+    led = TBTLedger(closed_window=3)
+    for rid in range(10):
+        led.observe(rid, 0.0)
+        led.observe(rid, 0.1)
+        led.close(rid)
+    assert len(led.by_rid) == 3
+    assert sorted(led.by_rid) == [7, 8, 9]      # most recently closed kept
+    assert led.total_gaps == 10                  # lifetime counters intact
+    # closed_window=None keeps everything (benchmark mode)
+    exact = TBTLedger(closed_window=None)
+    for rid in range(5):
+        exact.observe(rid, 0.0)
+        exact.observe(rid, 0.1)
+        exact.close(rid)
+    assert len(exact.by_rid) == 5
+
+
+def test_p2_sketch_tracks_percentiles():
+    from repro.core.qos import P2Quantile
+    rng = np.random.default_rng(0)
+    xs = rng.exponential(1.0, size=20_000)
+    p50, p99 = P2Quantile(0.5), P2Quantile(0.99)
+    for x in xs:
+        p50.update(float(x))
+        p99.update(float(x))
+    assert p50.value() == pytest.approx(np.percentile(xs, 50), rel=0.05)
+    assert p99.value() == pytest.approx(np.percentile(xs, 99), rel=0.10)
+    # tiny-sample fallback is the exact empirical percentile
+    small = P2Quantile(0.5)
+    for x in (3.0, 1.0, 2.0):
+        small.update(x)
+    assert small.value() == 2.0
 
 
 def test_union_selection_shapes():
