@@ -16,11 +16,15 @@ prompts' TTFT (p50/p99 tails across the long arrivals), for monolithic
 (prefill_budget=None) vs chunked runs of the same workload.
 
 ``--fairness both`` runs every chunked budget under head-of-line ("fifo")
-AND round-robin ("rr") budget rotation. The TTFT-tail story is the
-*straggler*: a short prompt submitted right after the long ones. Under
-FIFO it waits for every long prefill ahead of it to finish completely
-(TTFT ~ sum of long prefills); under RR the per-step budget rotates, so
-the straggler finishes after ~n_prefilling turns. For EQUAL-length
+AND round-robin ("rr") budget rotation; ``--fairness all`` adds
+shortest-remaining-first ("srf"). The TTFT-tail story is the *straggler*:
+a short prompt submitted right after the long ones. Under FIFO it waits
+for every long prefill ahead of it to finish completely (TTFT ~ sum of
+long prefills); under RR the per-step budget rotates, so the straggler
+finishes after ~n_prefilling turns; under SRF the straggler — by
+construction the shortest remaining — overtakes every long prefill
+immediately, the best straggler TTFT of the three, while the LONG
+prompts' TTFT tail pays for everyone that overtook them. For EQUAL-length
 overlapping prompts RR is processor sharing — everyone finishes late
 together — so the trade is reported, not assumed: per mode we print the
 long prompts' TTFT p50/p99 AND the straggler's TTFT.
@@ -130,9 +134,10 @@ def main():
     ap.add_argument("--budgets", default="4,8",
                     help="comma list of chunk budgets (tokens/step)")
     ap.add_argument("--fairness", default="rr",
-                    choices=["fifo", "rr", "both"],
+                    choices=["fifo", "rr", "srf", "both", "all"],
                     help="budget sharing across prefilling requests; "
-                         "'both' compares TTFT tails of the two")
+                         "'both' compares fifo vs rr TTFT tails, 'all' "
+                         "adds shortest-remaining-first")
     ap.add_argument("--decoders", type=int, default=2)
     ap.add_argument("--decoder-len", type=int, default=8)
     ap.add_argument("--long-len", type=int, default=48)
@@ -153,8 +158,9 @@ def main():
     params = bundle.init(jax.random.PRNGKey(0))
 
     budgets = [None] + [int(b) for b in args.budgets.split(",")]
-    fair_modes = (["fifo", "rr"] if args.fairness == "both"
-                  else [args.fairness])
+    fair_modes = {"both": ["fifo", "rr"],
+                  "all": ["fifo", "rr", "srf"]}.get(args.fairness,
+                                                    [args.fairness])
     print(f"{'mode':>18s} {'gap_p50':>9s} {'gap_p99':>9s} {'gap_max':>9s} "
           f"{'ttft_p50':>9s} {'ttft_p99':>9s} {'straggler':>10s}")
     records = []

@@ -1,8 +1,25 @@
-"""Continuous-batching demo: concurrent requests through the batched engine
-vs the same requests served one-by-one, with token-parity verification and
-an SLO-shedding illustration.
+"""Streaming serving demo: concurrent requests through the request-handle
+front-end (spec -> handle -> events) vs the same requests served one-by-one,
+with token-parity verification, a live mid-flight cancellation, and an
+SLO-shedding illustration.
+
+The serving API in three moves:
+
+  1. Describe a request:   GenerationRequest(prompt, SamplingParams(...),
+                           ttft_slo=..., tbt_slo=..., priority=...)
+  2. Submit, get a handle: h = frontend.submit(spec)  — an iterator that
+                           streams tokens as the engine emits them, with
+                           .status / .result() / .cancel()
+  3. Drive cooperatively:  iterating a handle (or frontend.poll()) runs the
+                           engine step loop; no threads anywhere.
+
+Cancellation is synchronous: h.cancel() frees the request's KV slot,
+drops its expert-residency contributions from the shared ledger, closes
+its TBT entry, and the handle is terminal before the call returns —
+surviving requests' tokens are bit-unaffected.
 
   PYTHONPATH=src python examples/serve_concurrent.py --requests 4 --max-new 5
+  PYTHONPATH=src python examples/serve_concurrent.py --smoke   # CI
 """
 import argparse
 import time
@@ -14,9 +31,11 @@ from repro.configs.base import get_config, reduced
 from repro.core.qos import AdmissionController, LatencyModel, percentile_report
 from repro.data.pipeline import PromptWorkload, squad_like
 from repro.models.model import build
+from repro.serving.api import GenerationRequest, SamplingParams
 from repro.serving.batching import (BatchedServingEngine, RequestQueue,
                                     parse_prefill_budget)
 from repro.serving.engine import MoEServingEngine
+from repro.serving.frontend import ServingFrontend
 
 
 def main():
@@ -33,7 +52,14 @@ def main():
                          "--tbt-slo; default monolithic")
     ap.add_argument("--tbt-slo", type=float, default=None,
                     help="target inter-token gap (s) for auto budget")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fast run for CI: small workload, chunked "
+                         "prefill, asserts parity + cancellation safety")
     args = ap.parse_args()
+
+    if args.smoke:
+        args.requests, args.max_new = 3, 3
+        args.prefill_budget = args.prefill_budget or "2"
 
     cfg = reduced(get_config(args.arch))
     bundle = build(cfg)
@@ -47,45 +73,100 @@ def main():
     seq_results = [seq.serve(p, max_new=args.max_new) for p in prompts]
     seq_wall = time.perf_counter() - t0
 
-    # continuous batching: all requests in flight, one shared expert cache
+    # [streaming] all requests in flight through the request-handle
+    # front-end: submit typed specs, stream each handle round-robin so the
+    # tokens print in the interleaved order the engine produces them
     eng = BatchedServingEngine(cfg, params, policy=args.policy,
                                max_batch=args.max_batch, max_seq=64,
                                prefill_budget=parse_prefill_budget(
                                    args.prefill_budget),
                                tbt_slo=args.tbt_slo,
                                temperature=0.0)
+    fe = ServingFrontend(eng)
     t0 = time.perf_counter()
-    for p in prompts:
-        eng.submit(p, max_new=args.max_new)
-    finished = sorted(eng.run_until_drained(), key=lambda r: r.rid)
+    handles = [fe.submit(GenerationRequest(
+        prompt=p, params=SamplingParams(max_new_tokens=args.max_new),
+        priority=i % 2))          # alternate priorities, just to show them
+        for i, p in enumerate(prompts)]
+    streams = [[] for _ in handles]
+    iters = [iter(h) for h in handles]
+    live = list(range(len(handles)))
+    while live:
+        for i in list(live):
+            try:
+                streams[i].append(next(iters[i]))
+            except StopIteration:
+                live.remove(i)
     batch_wall = time.perf_counter() - t0
 
     print(f"{args.requests} requests, max_new={args.max_new}, "
           f"policy={args.policy}")
     ok = True
-    for i, (r, s) in enumerate(zip(finished, seq_results)):
-        same = bool(np.array_equal(r.result().tokens, s.tokens))
+    for i, (h, s) in enumerate(zip(handles, seq_results)):
+        same = bool(np.array_equal(np.asarray(streams[i]), s.tokens))
         ok &= same
-        print(f"  req{i}: tokens={r.result().tokens.tolist()} "
-              f"match_sequential={same}")
-    ttfts = [r.result().ttft_wall for r in finished]
+        print(f"  req{i}: streamed={streams[i]} status={h.status} "
+              f"reason={h.finish_reason} match_sequential={same}")
+    ttfts = [h.result().ttft_wall for h in handles]
     print(f"sequential wall: {seq_wall:6.2f}s   "
-          f"batched wall: {batch_wall:6.2f}s "
+          f"streamed wall: {batch_wall:6.2f}s "
           f"({seq_wall / max(batch_wall, 1e-9):.2f}x)")
-    print(f"batched TTFT: {percentile_report(ttfts)}  "
+    print(f"streamed TTFT: {percentile_report(ttfts)}  "
           f"mean decode batch: {np.mean(eng.decode_batch_hist):.2f}")
-    assert ok, "batched tokens diverged from sequential"
+    assert ok, "streamed tokens diverged from sequential"
 
-    # SLO shedding: a pessimistic cost model + tight deadline -> reject
+    # [cancellation] a fresh batch; one request is cancelled after its
+    # second token — its KV slot and expert budget free immediately, the
+    # survivor's tokens stay bit-identical to its sequential run. Needs
+    # two prompts and enough decode steps for a mid-flight cancel.
+    if args.requests < 2 or args.max_new < 2:
+        print("cancellation demo skipped (needs --requests >= 2 and "
+              "--max-new >= 2)")
+    else:
+        eng2 = BatchedServingEngine(cfg, params, policy=args.policy,
+                                    max_batch=2, max_seq=64,
+                                    prefill_budget=parse_prefill_budget(
+                                        args.prefill_budget),
+                                    tbt_slo=args.tbt_slo, temperature=0.0)
+        fe2 = ServingFrontend(eng2)
+        survivor = fe2.submit(GenerationRequest(
+            prompt=prompts[0],
+            params=SamplingParams(max_new_tokens=args.max_new)))
+        victim = fe2.submit(GenerationRequest(
+            prompt=prompts[1],
+            params=SamplingParams(max_new_tokens=args.max_new)))
+        while len(victim.tokens) < 2 and not victim.done:
+            fe2.poll()
+        t_req = time.perf_counter()
+        assert victim.cancel()
+        t_cancel = victim.events[-1].t - t_req
+        fe2.drain()
+        surv_ok = bool(np.array_equal(survivor.result().tokens,
+                                      seq_results[0].tokens))
+        print(f"cancellation demo: victim cancelled after "
+              f"{len(victim.tokens)} tokens in {t_cancel * 1e3:.2f}ms "
+              f"(slot freed: {victim.req.slot in eng2._free}); "
+              f"survivor bit-exact: {surv_ok}")
+        assert surv_ok, "cancellation perturbed the surviving request"
+        assert victim.finish_reason == "cancelled"
+
+    # [SLO shedding] a pessimistic cost model + tight deadline -> reject
     queue = RequestQueue(AdmissionController(
         LatencyModel(prefill_per_token=10.0), default_ttft_slo=1.0))
     shed = BatchedServingEngine(cfg, params, policy=args.policy,
                                 max_batch=2, max_seq=64, queue=queue,
                                 temperature=0.0)
-    shed.submit(prompts[0], max_new=2)
-    shed.run_until_drained(max_steps=10)
+    fe3 = ServingFrontend(shed)
+    doomed = fe3.submit(GenerationRequest(
+        prompt=prompts[0], params=SamplingParams(max_new_tokens=2)))
+    fe3.poll()
     print(f"SLO demo: {len(queue.rejected)} request(s) shed "
-          f"(predicted TTFT over a 1s deadline)")
+          f"(predicted TTFT over a 1s deadline); handle status: "
+          f"{doomed.status}")
+
+    if args.smoke:
+        assert doomed.finish_reason == "rejected"
+        print("serve_concurrent smoke OK")
 
 
 if __name__ == "__main__":

@@ -206,6 +206,16 @@ class TBTLedger:
         """Lifetime maximum gap (scalar — survives window eviction)."""
         return self._max
 
+    def attainment(self, rid: int, slo: float) -> float:
+        """Fraction of request `rid`'s retained gaps that met `slo` (its
+        per-request TBT-SLO attainment; nan if no gaps recorded). Computed
+        over the per-request window — call before the request ages out of
+        `closed_window` for exact numbers."""
+        gaps = self.by_rid.get(rid)
+        if not gaps:
+            return float("nan")
+        return float(np.mean([g <= slo for g in gaps]))
+
     def report(self, qs: Sequence[float] = (50, 99)) -> Dict[str, float]:
         """Exact percentiles over the retained window, plus lifetime
         `max`/`n` and `p<q>_stream` P^2 estimates over everything ever
@@ -258,6 +268,18 @@ class LatencyModel:
 
     def predict_prefill(self, n_tokens: int) -> float:
         return n_tokens * self.prefill_per_token
+
+    def predict_tbt(self, chunk_budget: Optional[int] = None) -> float:
+        """Steady-state inter-token gap a decoder sees per engine iteration:
+        one batched decode step, plus — on a chunked engine — up to one
+        prefill chunk of interference when prompts are prefilling. Monolithic
+        engines (chunk_budget None) report the decode step only; their gaps
+        are UNBOUNDED while a prefill runs (the whole point of chunking), so
+        a monolithic prediction is a floor, not a guarantee."""
+        gap = self.decode_step
+        if chunk_budget is not None and chunk_budget > 0:
+            gap += chunk_budget * self.prefill_per_token
+        return gap
 
     def suggest_chunk(self, tbt_slo: float, floor: int = 1,
                       ceiling: int = 4096) -> int:
@@ -312,11 +334,29 @@ class AdmissionController:
                queued_tokens_ahead: int,
                ttft_slo: Optional[float] = None, *,
                running_batch: int = 0,
-               chunk_budget: Optional[int] = None) -> Admission:
+               chunk_budget: Optional[int] = None,
+               tbt_slo: Optional[float] = None,
+               chunk_adaptive: bool = False) -> Admission:
         """ADMIT if the predicted TTFT (incl. the backlog ahead) fits the
         deadline; QUEUE if only the backlog breaches it (it may drain, the
         deadline is still reachable); REJECT if even an immediate start
-        would breach — the request is hopeless and is shed."""
+        would breach — the request is hopeless and is shed.
+
+        tbt_slo (per-request): a structurally unmeetable inter-token-gap
+        target is REJECTED outright — waiting never improves the steady
+        per-step gap, so a QUEUE verdict would be a lie. The prediction
+        charges the chunk the engine will actually run for this request:
+        a fixed-budget engine keeps `chunk_budget` no matter what, while an
+        adaptive one (`chunk_adaptive`, prefill_budget="auto") shrinks its
+        chunk to the tightest in-flight tbt_slo — so only then does the
+        check use min(current budget, suggest_chunk(tbt_slo))."""
+        if tbt_slo is not None:
+            cb = chunk_budget
+            if cb is not None and chunk_adaptive:
+                cb = min(cb, self.model.suggest_chunk(tbt_slo))
+            if self.model.predict_tbt(cb) > tbt_slo:
+                self.n_rejected += 1
+                return Admission.REJECT
         slo = ttft_slo if ttft_slo is not None else self.default_ttft_slo
         if slo is None:
             return Admission.ADMIT

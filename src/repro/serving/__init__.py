@@ -1,22 +1,39 @@
-"""DuoServe-MoE serving runtime.
+"""DuoServe-MoE serving runtime: spec -> handle -> events.
 
-Two front-ends over one execution substrate:
+The public serving surface, top down:
 
-  * ``engine.MoEServingEngine`` — the paper-scope single-request engine
-    (layer-by-layer prefill/decode with the dual-phase expert scheduler).
-  * ``batching.BatchedServingEngine`` — continuous batching for concurrent
-    load: an SLO-aware ``RequestQueue`` admits requests mid-flight, prefill
-    for new arrivals interleaves with one batched decode step per iteration,
-    KV lives in a slot pool with per-request write positions, and each
-    step's per-layer expert selections are unioned across the batch before
-    they reach the ONE shared scheduler/ExpertResidency ledger (decode-plan
-    union semantics: one fetch per distinct expert per step, hit/miss
-    accounting over distinct experts). Expert weights live in the
-    residency's fixed slot-pool device buffers — expert HBM is bounded by
-    ``capacity * bytes_per_expert`` at every step.
+  * ``api`` — the typed vocabulary: ``SamplingParams`` (frozen sampling
+    spec: temperature, max_new_tokens, stop_token_ids, seed),
+    ``GenerationRequest`` (prompt + params + ttft_slo/tbt_slo QoS targets +
+    priority + arrival), and the event records ``TokenEvent`` /
+    ``FinishEvent`` / ``RejectEvent`` grouped per step as ``StepEvents``.
+  * ``frontend.ServingFrontend`` — the streaming request-handle front-end:
+    ``submit(GenerationRequest) -> RequestHandle``; each cooperative
+    ``poll()`` runs one engine step and routes its events; a handle is an
+    iterator yielding tokens as they land, with ``.status``, ``.result()``
+    and mid-flight ``.cancel()`` (KV slot, expert-residency contributions,
+    and TBT-ledger entry reclaimed synchronously).
+  * ``batching.BatchedServingEngine`` — the continuous-batching engine the
+    frontend drives: SLO-aware priority admission (``RequestQueue``),
+    chunked stall-free prefill (fairness: rr / srf / fifo), one batched
+    decode step per iteration, per-layer expert selections unioned into
+    ONE shared scheduler/ExpertResidency ledger (expert HBM bounded by
+    ``capacity * bytes_per_expert`` at every step). ``step()`` emits the
+    event stream; ``run_until_drained()`` is a thin compat wrapper.
+  * ``engine.MoEServingEngine`` — the paper-scope single-request engine;
+    its ``serve()`` is likewise a thin wrapper assembling a
+    ``RequestResult`` from the same event records.
 
-Both produce ``RequestResult`` records; at temperature 0 they emit identical
-tokens for the same prompt (batched decode is bit-exact per row).
+Determinism contract: at temperature 0 every front-end — handle streams
+under ANY poll() schedule, ``run_until_drained()``, single-request
+``serve()`` — yields bit-identical tokens for the same prompt, including
+chunked prefill, mid-flight admission, and batches shrunk by cancellation
+(tests/test_serving_batch.py, tests/test_frontend.py).
 """
+from repro.serving.api import (Event, FinishEvent,  # noqa: F401
+                               GenerationRequest, RejectEvent,
+                               SamplingParams, StepEvents, TokenEvent)
 from repro.serving.engine import (EngineCore, MoEServingEngine,  # noqa: F401
                                   RequestResult, collect_traces)
+from repro.serving.frontend import (RequestHandle,  # noqa: F401
+                                    ServingFrontend)

@@ -1,0 +1,137 @@
+"""Typed serving API: request specs, sampling params, and the event stream.
+
+This module is the public vocabulary of the serving front-end
+(``serving/frontend.py``) and the continuous-batching engine
+(``serving/batching.py``):
+
+  * ``SamplingParams`` — frozen per-request sampling spec (temperature,
+    max_new_tokens, stop_token_ids, seed). Replaces the scattered
+    ``temperature=`` / ``max_new=`` kwargs the engines used to take.
+  * ``GenerationRequest`` — one request as the caller describes it: prompt,
+    sampling params, QoS targets (ttft_slo, tbt_slo), scheduling priority,
+    and arrival time. The engine turns this into its internal runtime
+    ``Request`` record at submission.
+  * ``TokenEvent`` / ``FinishEvent`` / ``RejectEvent`` — the per-step event
+    stream ``BatchedServingEngine.step()`` emits instead of mutating token
+    lists as its only output. ``StepEvents`` is one step's batch of events
+    plus a ``did_work`` flag (admission / prefill-chunk work can be real
+    work that emits no token yet).
+
+Nothing here imports the engines, so the spec types are importable from
+anywhere (benchmarks, examples, tests) without pulling in jax state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional, Tuple, Union
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Frozen per-request sampling specification.
+
+    temperature: None = use the engine's default temperature; <= 0 = greedy.
+    max_new_tokens: decode steps after the first token — a request emits at
+        most ``max_new_tokens + 1`` tokens total (first token included),
+        matching the engines' historical ``max_new`` semantics.
+    stop_token_ids: early-termination set — the stop token itself is still
+        emitted (so streams stay bit-comparable to un-stopped runs up to and
+        including the stop position), then the request finishes with reason
+        ``"stop_token"``.
+    seed: per-request sampling seed; None derives one from the engine seed
+        and the request id (deterministic per submission order).
+    """
+    temperature: Optional[float] = None
+    max_new_tokens: int = 16
+    stop_token_ids: Tuple[int, ...] = ()
+    seed: Optional[int] = None
+
+    def __post_init__(self):
+        # normalize any iterable of stop ids into a hashable int tuple
+        object.__setattr__(self, "stop_token_ids",
+                           tuple(int(t) for t in self.stop_token_ids))
+        assert self.max_new_tokens >= 0, "max_new_tokens must be >= 0"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class GenerationRequest:
+    """One serving request as the caller specifies it (spec, not state).
+
+    prompt: [S] int32 token ids.
+    params: sampling spec (see SamplingParams).
+    ttft_slo: deadline (seconds, arrival -> first token) for SLO-aware
+        admission; None = no deadline.
+    tbt_slo: per-request inter-token-gap target (seconds). Admission rejects
+        requests whose steady-state gap is structurally unmeetable, and the
+        engine's ``prefill_budget="auto"`` tightens its chunk to the minimum
+        tbt_slo across in-flight requests.
+    priority: higher = served first; ``RequestQueue.pop_admissible`` orders
+        candidates by (priority desc, arrival order) — stable, so equal
+        priorities keep FIFO.
+    arrival: wall-clock arrival time (time.perf_counter domain); None =
+        stamped at submission.
+    """
+    prompt: np.ndarray
+    params: SamplingParams = SamplingParams()
+    ttft_slo: Optional[float] = None
+    tbt_slo: Optional[float] = None
+    priority: int = 0
+    arrival: Optional[float] = None
+
+
+# ---------------------------------------------------------------------------
+# event stream
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenEvent:
+    """Request `rid` emitted generated token `token` (its `index`-th) at
+    wall time `t`; `first` marks the TTFT token."""
+    rid: int
+    token: int
+    index: int
+    t: float
+    first: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class FinishEvent:
+    """Request `rid` left the engine: reason is ``"length"`` (max_new_tokens
+    reached), ``"stop_token"``, or ``"cancelled"``. After a FinishEvent the
+    engine emits no further events for `rid` — ever."""
+    rid: int
+    reason: str
+    n_tokens: int
+    t: float
+
+
+@dataclasses.dataclass(frozen=True)
+class RejectEvent:
+    """Request `rid` was shed at admission (predicted SLO breach)."""
+    rid: int
+    reason: str
+    t: float
+
+
+Event = Union[TokenEvent, FinishEvent, RejectEvent]
+
+
+class StepEvents(list):
+    """One ``step()``'s events, in emission order, plus ``did_work``.
+
+    A list subclass so existing consumers can iterate/len it directly;
+    ``did_work`` is True when the step admitted, prefilled, or decoded
+    anything — prefill-chunk work is real work that may emit no event, so
+    idle detection must use ``did_work`` (or the engine's ``idle``
+    property), not truthiness of the list.
+    """
+
+    def __init__(self, events: Iterable[Event] = (), did_work: bool = False):
+        super().__init__(events)
+        self.did_work = did_work
+
+    def for_rid(self, rid: int) -> "StepEvents":
+        return StepEvents([e for e in self if e.rid == rid], self.did_work)

@@ -1,13 +1,23 @@
-"""Continuous-batching serving front-end (ROADMAP: multi-request QoS).
+"""Continuous-batching serving engine (ROADMAP: multi-request QoS).
 
 Generalizes the paper's single-request dual-phase runtime to concurrent
-load, the regime its TTFT/E2E SLO claims actually target:
+load, the regime its TTFT/E2E SLO claims actually target. The public
+surface is typed and event-driven (``serving/api.py`` +
+``serving/frontend.py``): callers describe a request as a
+``GenerationRequest`` (prompt + frozen ``SamplingParams`` + QoS targets +
+priority), ``step()`` emits a ``StepEvents`` list of
+``TokenEvent``/``FinishEvent``/``RejectEvent`` records, and requests can be
+cancelled mid-prefill or mid-decode with their KV slot, expert-residency
+contributions, and TBT-ledger entry reclaimed within the same call.
 
   * ``RequestQueue`` — arrival queue with SLO-aware admission: predicted
     TTFT (EWMA cost model, ``core/qos.py``) is checked against each
     request's deadline, folding in the remaining prefill backlog AND the
     running batch's decode interference; requests whose deadline is already
-    unmeetable are shed instead of poisoning the batch.
+    unmeetable are shed instead of poisoning the batch. Per-request
+    ``tbt_slo`` targets that are structurally unmeetable are shed too.
+    Candidates are considered in (priority desc, arrival) order — stable,
+    so equal priorities keep FIFO.
   * ``BatchedServingEngine`` — continuous batching over the layer-by-layer
     engine core: requests are admitted mid-flight; each scheduler iteration
     spends at most ``prefill_budget`` prompt tokens of (chunked) prefill
@@ -18,62 +28,76 @@ load, the regime its TTFT/E2E SLO claims actually target:
   * Chunked, stall-free prefill (paper §III phase disparity): a long prompt
     no longer freezes in-flight decoders for its whole prefill. Admitted
     requests sit in state ``prefilling``; each iteration spends the step's
-    token budget on chunks through ``EngineCore.prefill_chunk`` (the chunk
-    attends over the slot's already-written KV prefix and appends its own
-    K/V), so inter-token gaps for decoders stay bounded by one chunk + one
-    decode step instead of a full prefill. The budget is shared FAIRLY:
+    token budget on chunks through ``EngineCore.prefill_chunk``, so
+    inter-token gaps for decoders stay bounded by one chunk + one decode
+    step instead of a full prefill. The budget is shared FAIRLY:
     ``prefill_fairness="rr"`` (default) rotates the per-step budget across
     ALL prefilling requests so one long prompt cannot starve later
-    arrivals' TTFT; ``"fifo"`` restores the head-of-line discipline.
-    ``prefill_budget="auto"`` derives the budget
-    each step from the live ``LatencyModel`` so one chunk + one batched
-    decode step fits the ``tbt_slo`` target (core/qos.py
-    ``suggest_chunk``). Per-chunk expert activations go through the same
-    per-layer ``prefill_plan`` path, sharing the expert residency with
-    decode. ``prefill_budget=None`` preserves the monolithic behaviour.
-    The ``TBTLedger`` (core/qos.py) records per-request inter-token gaps
-    in bounded windows with streaming P^2 percentile sketches;
-    ``benchmarks/bench_stall.py`` measures the bound.
+    arrivals' TTFT; ``"srf"`` serves shortest-remaining-first (short
+    prompts overtake long backlogs — best straggler TTFT, long prompts pay);
+    ``"fifo"`` restores the head-of-line discipline.
+    ``prefill_budget="auto"`` derives the budget each step from the live
+    ``LatencyModel`` so one chunk + one batched decode step fits the
+    TIGHTEST inter-token-gap target in flight (the engine ``tbt_slo`` and
+    every in-flight request's own ``tbt_slo``; core/qos.py
+    ``suggest_chunk``). ``prefill_budget=None`` preserves the monolithic
+    behaviour. The ``TBTLedger`` (core/qos.py) records per-request
+    inter-token gaps; ``benchmarks/bench_stall.py`` measures the bound.
   * Decode-phase expert scheduling is shared: per-step, per-layer expert
     selections of all B requests are unioned (first-appearance order) and
     handed to ONE scheduler/ExpertResidency ledger (paper §V generalized to
-    B>1) — each distinct expert is fetched at most once per step, and the
-    ExpertMLP prediction stream prefetches layer l+1 for the whole batch.
+    B>1) — each distinct expert is fetched at most once per step.
+  * Cancellation (``cancel``): a queued request is dequeued; a prefilling or
+    running request is removed from its phase list, its KV slot returns to
+    the free pool, its expert-residency contributions are dropped from the
+    shared ledger (only entries no OTHER in-flight request also touched —
+    surviving rows keep their working set), and its ``TBTLedger`` entry is
+    closed. The request emits one final ``FinishEvent("cancelled")`` and
+    never emits again. Survivors are bit-unaffected: every decode kernel is
+    row-wise deterministic, so shrinking the batch never changes their
+    tokens (tests/test_frontend.py).
 
 Exactness invariant: every decode-side kernel is row-wise deterministic,
 per-row accumulation follows each request's own top-k order, and chunked
 prefill's valid-key sets/per-token expert order match monolithic prefill
 row-wise — so at temperature 0 a batched step reproduces the
-single-request engine's tokens bit-exactly for EVERY chunk size
-(tests/test_serving_batch.py).
+single-request engine's tokens bit-exactly for EVERY chunk size, fairness
+mode, and poll() schedule (tests/test_serving_batch.py,
+tests/test_frontend.py).
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import time
-from typing import Deque, Dict, List, Optional, Union
+from typing import Deque, Dict, List, Optional, Set, Union
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.cache import ExpertKey
 from repro.core.qos import Admission, AdmissionController, TBTLedger
 from repro.core.scheduler import DuoServeScheduler
 from repro.models.layers import PDT
+from repro.serving.api import (FinishEvent, GenerationRequest, RejectEvent,
+                               SamplingParams, StepEvents, TokenEvent)
 from repro.serving.engine import EngineCore, RequestResult
 
 
 @dataclasses.dataclass
 class Request:
-    """One serving request moving through the continuous-batching engine."""
+    """One request's RUNTIME state inside the engine (the engine-internal
+    counterpart of the immutable ``GenerationRequest`` spec)."""
     rid: int
     prompt: np.ndarray               # [S] int32
-    max_new: int
+    params: SamplingParams
     arrival: float
     ttft_slo: Optional[float] = None
-    temperature: Optional[float] = None   # None = engine default
+    tbt_slo: Optional[float] = None
+    priority: int = 0
     # runtime state ---------------------------------------------------------
-    state: str = "queued"            # queued|prefilling|running|done|rejected
+    state: str = "queued"    # queued|prefilling|running|done|rejected|cancelled
+    finish_reason: Optional[str] = None   # length|stop_token|cancelled
     slot: int = -1
     prefill_pos: int = 0             # prompt tokens already prefilled
     tokens: List[int] = dataclasses.field(default_factory=list)
@@ -95,6 +119,14 @@ class Request:
     rng: Optional[np.random.Generator] = None
 
     @property
+    def max_new(self) -> int:
+        return self.params.max_new_tokens
+
+    @property
+    def temperature(self) -> Optional[float]:
+        return self.params.temperature   # None = engine default
+
+    @property
     def prompt_len(self) -> int:
         return int(self.prompt.shape[0])
 
@@ -109,7 +141,10 @@ class Request:
 
     @property
     def done(self) -> bool:
-        return len(self.tokens) >= self.max_new + 1  # first token + max_new
+        # first token + max_new decode steps, or an early finish
+        # (stop token / cancellation) recorded in finish_reason
+        return (self.finish_reason is not None
+                or len(self.tokens) >= self.max_new + 1)
 
     def result(self) -> RequestResult:
         T = len(self.trace)
@@ -121,9 +156,13 @@ class Request:
                           else np.zeros((0,) + L_k, np.int32)),
             pred_trace=(np.stack(self.pred) if T
                         else np.zeros((0,) + L_k, np.int32)),
-            ttft_wall=self.t_first - self.arrival,
+            # cancelled before the first token: no TTFT exists (t_first
+            # still holds its 0.0 sentinel — not a real timestamp)
+            ttft_wall=(self.t_first - self.arrival if self.t_first
+                       else float("nan")),
             e2e_wall=self.t_done - self.arrival,
-            hits=self.hits, misses=self.misses)
+            hits=self.hits, misses=self.misses,
+            finish_reason=self.finish_reason or "length")
 
 
 def parse_prefill_budget(v: Union[int, str, None]) -> Union[int, str, None]:
@@ -139,16 +178,19 @@ def parse_prefill_budget(v: Union[int, str, None]) -> Union[int, str, None]:
 
 
 class RequestQueue:
-    """FIFO arrival queue with SLO-aware admission (core/qos.py).
+    """Arrival queue with SLO-aware admission (core/qos.py).
 
     `pop_admissible` hands back up to `limit` requests whose predicted TTFT
     fits their deadline; breached requests are shed (state='rejected') so a
     doomed prompt never occupies a KV slot another request could meet its
-    SLO with. The prediction folds in the prefill backlog already admitted
-    (`backlog_tokens`, chunked requests mid-prefill) and the running batch's
-    decode interference (`running_batch` — one batched decode step per
-    engine iteration the candidate's prefill spans), so admission doesn't
-    systematically under-predict TTFT under high decode concurrency.
+    SLO with, and requests whose per-request `tbt_slo` is structurally
+    unmeetable (steady per-step gap over target, core/qos.py
+    `predict_tbt`) are shed too. Candidates are considered in
+    (priority desc, arrival) order — the sort is stable over the FIFO
+    deque, so equal priorities preserve arrival order and the historical
+    all-priority-0 behaviour is unchanged. The TTFT prediction folds in the
+    prefill backlog already admitted (`backlog_tokens`) and the running
+    batch's decode interference (`running_batch`).
     """
 
     def __init__(self, admission: Optional[AdmissionController] = None):
@@ -162,30 +204,47 @@ class RequestQueue:
     def submit(self, req: Request) -> None:
         self.pending.append(req)
 
+    def remove(self, req: Request) -> bool:
+        """Withdraw a still-queued request (cancellation before admission)."""
+        try:
+            self.pending.remove(req)
+            return True
+        except ValueError:
+            return False
+
     def queued_tokens(self) -> int:
         return sum(r.prompt_len for r in self.pending)
 
     def pop_admissible(self, now: float, limit: int, *,
                        backlog_tokens: int = 0, running_batch: int = 0,
-                       chunk_budget: Optional[int] = None) -> List[Request]:
+                       chunk_budget: Optional[int] = None,
+                       chunk_adaptive: bool = False) -> List[Request]:
         out: List[Request] = []
         ahead = backlog_tokens
-        while self.pending and len(out) < limit:
-            req = self.pending[0]
+        taken: List[Request] = []
+        # stable priority-then-arrival order: GenerationRequest.priority is
+        # load-bearing — a high-priority late arrival is considered first
+        for req in sorted(self.pending, key=lambda r: -r.priority):
+            if len(out) >= limit:
+                break
             verdict = self.admission.decide(
                 now, req.arrival, req.prompt_len, ahead, req.ttft_slo,
-                running_batch=running_batch, chunk_budget=chunk_budget)
+                running_batch=running_batch, chunk_budget=chunk_budget,
+                tbt_slo=req.tbt_slo, chunk_adaptive=chunk_adaptive)
             if verdict is Admission.QUEUE:
                 # deadline still reachable once the backlog drains: keep the
-                # request at the head (FIFO) and stop admitting this round
+                # request where it is and stop admitting this round (a
+                # lower-priority request must not jump past a queued one)
                 break
-            self.pending.popleft()
+            taken.append(req)
             if verdict is Admission.REJECT:
                 req.state = "rejected"
                 self.rejected.append(req)
                 continue
             ahead += req.prompt_len
             out.append(req)
+        for req in taken:
+            self.pending.remove(req)
         return out
 
 
@@ -200,14 +259,21 @@ class BatchedServingEngine(EngineCore):
         gaps stay bounded. None = monolithic (each admitted request
         prefills fully inside the step that admits it). "auto" = derive
         the budget each step from the live LatencyModel so one chunk + one
-        batched decode step fits `tbt_slo` (requires tbt_slo).
+        batched decode step fits the tightest in-flight TBT target
+        (requires tbt_slo as the fallback when no request carries one).
     prefill_fairness: "rr" (default) rotates the per-step budget across
         all prefilling requests (one chunk shape, fair progress over
-        steps); "fifo" always spends the budget head-of-line.
-    tbt_slo: target inter-token-gap bound (seconds) for the auto budget.
-    finished_window: retain only the most recent N finished requests
-        (None = unbounded; set for long-running servers so full
+        steps); "srf" serves shortest-remaining-first; "fifo" always
+        spends the budget head-of-line.
+    tbt_slo: engine-default inter-token-gap bound (seconds) for the auto
+        budget; per-request `tbt_slo` values tighten it.
+    finished_window: retain only the most recent N finished/cancelled
+        requests (None = unbounded; set for long-running servers so full
         per-request traces don't accumulate forever).
+
+    ``step()`` returns a ``StepEvents`` list (serving/api.py) — the event
+    stream is the primary output; ``run_until_drained()`` is a thin compat
+    wrapper that drives it and returns the finished-request records.
     """
 
     def __init__(self, cfg, params, policy: str = "duo", *,
@@ -235,7 +301,7 @@ class BatchedServingEngine(EngineCore):
         else:
             assert prefill_budget is None or prefill_budget >= 1, \
                 "prefill_budget must be None, 'auto', or >= 1 token"
-        assert prefill_fairness in ("rr", "fifo")
+        assert prefill_fairness in ("rr", "fifo", "srf")
         self.prefill_budget = prefill_budget
         self.prefill_fairness = prefill_fairness
         self.tbt_slo = tbt_slo
@@ -251,6 +317,8 @@ class BatchedServingEngine(EngineCore):
         self.running: List[Request] = []
         self.finished: Deque[Request] = collections.deque(
             maxlen=finished_window)
+        self.cancelled: Deque[Request] = collections.deque(
+            maxlen=finished_window)
         self.tbt = TBTLedger(window=tbt_window)
         self._next_rid = 0
         self._pf_rr = 0   # round-robin rotation cursor across steps
@@ -261,32 +329,155 @@ class BatchedServingEngine(EngineCore):
     def chunked(self) -> bool:
         return self.prefill_budget is not None
 
+    @property
+    def idle(self) -> bool:
+        """No queued, prefilling, or running requests — nothing a step()
+        could advance (event consumers use this, not event emptiness:
+        prefill-chunk work emits no token)."""
+        return not (self.running or self.prefilling or len(self.queue))
+
     def _current_budget(self) -> Optional[int]:
-        """Resolve this step's prefill token budget (auto mode consults the
-        live EWMA cost model; core/qos.py LatencyModel.suggest_chunk)."""
+        """Resolve this step's prefill token budget. Auto mode consults the
+        live EWMA cost model (core/qos.py LatencyModel.suggest_chunk)
+        against the TIGHTEST in-flight TBT target: the engine default and
+        every prefilling/running request's own tbt_slo."""
         if self.prefill_budget is None:
             return None
         if self.prefill_budget == "auto":
-            return self.queue.admission.model.suggest_chunk(self.tbt_slo)
+            slos = [r.tbt_slo for r in self.running + self.prefilling
+                    if r.tbt_slo is not None]
+            slos.append(self.tbt_slo)
+            return self.queue.admission.model.suggest_chunk(min(slos))
         return self.prefill_budget
 
+    # -- event sink (buffer + _emit/drain_events live in EngineCore) --------
+    def _emit_token(self, req: Request, tok: int, t: float,
+                    first: bool = False) -> None:
+        """THE token sink: every generated token — monolithic prefill,
+        final prefill chunk, batched decode — funnels through here, so the
+        event stream and the request's token list can never diverge. Also
+        the stop-token early-termination point."""
+        req.tokens.append(tok)
+        if first:
+            req.t_first = t
+        self.tbt.observe(req.rid, t)
+        if req.finish_reason is None and req.params.stop_token_ids \
+                and tok in req.params.stop_token_ids:
+            req.finish_reason = "stop_token"
+        self._emit(TokenEvent(rid=req.rid, token=tok,
+                              index=len(req.tokens) - 1, t=t, first=first))
+
     # -- submission ---------------------------------------------------------
-    def submit(self, prompt: np.ndarray, max_new: int = 16, *,
-               arrival: Optional[float] = None,
-               ttft_slo: Optional[float] = None,
-               temperature: Optional[float] = None) -> Request:
-        req = Request(rid=self._next_rid,
-                      prompt=np.asarray(prompt, np.int32).reshape(-1),
-                      max_new=max_new,
-                      arrival=(time.perf_counter() if arrival is None
-                               else arrival),
-                      ttft_slo=ttft_slo, temperature=temperature)
-        req.rng = np.random.default_rng(self.sample_seed + req.rid)
-        assert req.prompt_len + max_new + 1 <= self.W, \
-            f"request needs {req.prompt_len + max_new + 1} slots > W={self.W}"
+    def submit_request(self, spec: GenerationRequest) -> Request:
+        """Submit a typed GenerationRequest; returns the engine's runtime
+        Request record (wrap it in a ServingFrontend RequestHandle for the
+        streaming/cancellation interface)."""
+        prompt = np.asarray(spec.prompt, np.int32).reshape(-1)
+        req = Request(rid=self._next_rid, prompt=prompt, params=spec.params,
+                      arrival=(time.perf_counter() if spec.arrival is None
+                               else spec.arrival),
+                      ttft_slo=spec.ttft_slo, tbt_slo=spec.tbt_slo,
+                      priority=spec.priority)
+        seed = (spec.params.seed if spec.params.seed is not None
+                else self.sample_seed + req.rid)
+        req.rng = np.random.default_rng(seed)
+        need = req.prompt_len + spec.params.max_new_tokens + 1
+        assert need <= self.W, f"request needs {need} slots > W={self.W}"
         self._next_rid += 1
         self.queue.submit(req)
         return req
+
+    def submit(self, prompt: np.ndarray,
+               params: Optional[SamplingParams] = None, *,
+               max_new: Optional[int] = None,
+               arrival: Optional[float] = None,
+               ttft_slo: Optional[float] = None,
+               tbt_slo: Optional[float] = None,
+               priority: int = 0,
+               temperature: Optional[float] = None) -> Request:
+        """Compat sugar over `submit_request`: legacy `max_new=` /
+        `temperature=` kwargs are folded into a SamplingParams."""
+        if params is None:
+            params = SamplingParams(
+                temperature=temperature,
+                max_new_tokens=16 if max_new is None else max_new)
+        else:
+            assert max_new is None and temperature is None, \
+                "pass sampling via params OR legacy kwargs, not both"
+        return self.submit_request(GenerationRequest(
+            prompt=np.asarray(prompt, np.int32).reshape(-1), params=params,
+            ttft_slo=ttft_slo, tbt_slo=tbt_slo, priority=priority,
+            arrival=arrival))
+
+    # -- cancellation -------------------------------------------------------
+    def cancel(self, req: Request) -> bool:
+        """Cancel a request mid-flight. Synchronous and idempotent: on the
+        first call a queued request is dequeued; a prefilling/running one is
+        removed from its phase list, its KV slot returns to the free pool,
+        its expert-residency contributions are dropped from the shared
+        ledger (entries no other in-flight request also touched), and its
+        TBT-ledger entry closes. One final FinishEvent("cancelled") is
+        emitted; the request NEVER emits again. Returns False if already
+        terminal."""
+        if req.state in ("done", "rejected", "cancelled"):
+            return False
+        if req.state == "queued":
+            if not self.queue.remove(req):
+                return False
+        elif req.state == "prefilling":
+            self.prefilling.remove(req)
+            self._release_expert_contributions(req)
+            self._release_slot(req)
+        elif req.state == "running":
+            self.running.remove(req)
+            self._release_expert_contributions(req)
+            self._release_slot(req)
+        else:  # pragma: no cover - unknown state is a bug
+            raise AssertionError(f"cancel from state {req.state!r}")
+        req.state = "cancelled"
+        req.finish_reason = "cancelled"
+        req.t_done = time.perf_counter()
+        req.pf_k = req.pf_v = req.pf_sp = None
+        req.active_sets = None
+        self.tbt.close(req.rid)
+        self.cancelled.append(req)
+        self._emit(FinishEvent(rid=req.rid, reason="cancelled",
+                               n_tokens=len(req.tokens), t=req.t_done))
+        return True
+
+    def _release_slot(self, req: Request) -> None:
+        self._slot_pos[req.slot, :] = -1
+        self._free.append(req.slot)
+
+    def _release_expert_contributions(self, req: Request) -> None:
+        """Drop the cancelled request's expert-residency contributions: the
+        (layer, expert) entries ITS prefill chunks / last decode step
+        touched, minus anything another in-flight request also touched (a
+        survivor's working set must not be yanked — dropping it would only
+        cost refetches, never correctness, but the point of cancelling is
+        to FREE budget, not to churn it). Pins are step-scoped (every plan
+        path end_layer()s before the step returns), so between steps —
+        where cancellation runs — all of the request's entries are
+        unpinned; the pinned check is defensive."""
+        def touched(r: Request) -> Set[ExpertKey]:
+            keys: Set[ExpertKey] = set()
+            if r.active_sets is not None:          # mid-prefill
+                for l, s in enumerate(r.active_sets):
+                    keys |= {(l, int(e)) for e in s}
+            for l, acts in enumerate(r.prefill_active):
+                keys |= {(l, int(e)) for e in acts}
+            if r.trace:                            # last decode step
+                for l in range(self.L):
+                    keys |= {(l, int(e)) for e in r.trace[-1][l]}
+            return keys
+
+        mine = touched(req)
+        for other in self.prefilling + self.running:
+            if other is not req:
+                mine -= touched(other)
+        for key in mine:
+            if self.cache.contains(key) and not self.cache.resident[key]:
+                self.cache.drop(key)
 
     # -- prefill phase ------------------------------------------------------
     def _admit_and_prefill(self, now: float) -> List[Request]:
@@ -297,11 +488,16 @@ class BatchedServingEngine(EngineCore):
         Chunked mode: the request only transitions to 'prefilling'; chunk
         execution happens in `_prefill_work` under the step's token budget.
         """
+        n_rej = len(self.queue.rejected)
         backlog = sum(r.prefill_remaining for r in self.prefilling)
         newly = self.queue.pop_admissible(
             now, limit=len(self._free), backlog_tokens=backlog,
             running_batch=len(self.running),
-            chunk_budget=self._current_budget())
+            chunk_budget=self._current_budget(),
+            chunk_adaptive=self.prefill_budget == "auto")
+        for r in self.queue.rejected[n_rej:]:
+            self._emit(RejectEvent(rid=r.rid, reason="slo",
+                                   t=time.perf_counter()))
         for req in newly:
             slot = self._free.pop()
             req.slot = slot
@@ -330,9 +526,8 @@ class BatchedServingEngine(EngineCore):
             self._slot_pos[slot, :S] = np.arange(S, dtype=np.int32)
             req.prefill_pos = S
             req.prefill_active = active
-            req.tokens.append(self._sample_req(req, logits[0]))
-            req.t_first = time.perf_counter()
-            self.tbt.observe(req.rid, req.t_first)
+            tok = self._sample_req(req, logits[0])
+            self._emit_token(req, tok, time.perf_counter(), first=True)
             self.queue.admission.model.observe_prefill(S, req.t_first - t0)
             self.running.append(req)
         return newly
@@ -370,9 +565,8 @@ class BatchedServingEngine(EngineCore):
             req.pf_k = req.pf_v = req.pf_sp = None
             req.prefill_active = [sorted(s) for s in req.active_sets]
             req.active_sets = None
-            req.tokens.append(self._sample_req(req, logits[0]))
-            req.t_first = time.perf_counter()
-            self.tbt.observe(req.rid, req.t_first)
+            tok = self._sample_req(req, logits[0])
+            self._emit_token(req, tok, time.perf_counter(), first=True)
             req.state = "running"
             self.prefilling.remove(req)
             self.running.append(req)
@@ -387,11 +581,14 @@ class BatchedServingEngine(EngineCore):
         request receives the step's budget, so overlapping prompts make
         interleaved progress and a short arrival's TTFT is bounded by
         ~n_prefilling * (len/budget) steps instead of the whole backlog.
-        The budget goes to one request per step (spilling to the next in
-        rotation only when it finishes early) rather than being split —
-        chunk shapes stay constant, so the chunked-prefill kernels compile
-        once per budget, not once per (budget/n) share.
-        benchmarks/bench_stall.py --fairness compares the two."""
+        "srf" orders by `prefill_remaining` (shortest first, rid tiebreak):
+        a short straggler overtakes every long backlog immediately — the
+        best straggler TTFT of the three — while the longest prompt pays
+        for everyone that overtook it (bench_stall --fairness compares all
+        modes). In every mode the budget goes to one request at a time
+        (spilling to the next in order when it finishes early) rather than
+        being split — chunk shapes stay constant, so the chunked-prefill
+        kernels compile once per budget, not once per (budget/n) share."""
         if not self.chunked:
             return 0  # monolithic mode: prefill happened at admission
         budget = self._current_budget()
@@ -400,6 +597,11 @@ class BatchedServingEngine(EngineCore):
             rot = self._pf_rr % len(self.prefilling)
             self._pf_rr += 1
             order = self.prefilling[rot:] + self.prefilling[:rot]
+        elif self.prefilling and self.prefill_fairness == "srf":
+            # shortest-remaining-first: deterministic (rid tiebreak), and
+            # re-sorted every step so progress keeps the order current
+            order = sorted(self.prefilling,
+                           key=lambda r: (r.prefill_remaining, r.rid))
         else:
             order = list(self.prefilling)  # fifo: head-of-line
         for req in order:
@@ -423,6 +625,7 @@ class BatchedServingEngine(EngineCore):
 
         Per-row accumulation follows each request's own top-k order, so the
         result is bit-identical to B independent single-request steps.
+        Output goes through the `_emit_token` event sink.
         """
         B = len(batch)
         t0 = time.perf_counter()
@@ -499,19 +702,23 @@ class BatchedServingEngine(EngineCore):
         lg_np = np.asarray(logits, np.float64)
         t_tok = time.perf_counter()
         for b, r in enumerate(batch):
-            r.tokens.append(self._sample_req(r, lg_np[b]))
-            self.tbt.observe(r.rid, t_tok)
+            self._emit_token(r, self._sample_req(r, lg_np[b]), t_tok)
             r.trace.append(step_trace[b])
             r.pred.append(step_pred[b])
         self.queue.admission.model.observe_decode_step(t_tok - t0)
         self.decode_batch_hist.append(B)
 
     # -- scheduler loop -----------------------------------------------------
-    def step(self, now: Optional[float] = None) -> bool:
+    def step(self, now: Optional[float] = None) -> StepEvents:
         """One engine iteration: admit new arrivals, spend the prefill token
         budget on chunked prefill work (monolithic when prefill_budget is
         None), then one batched decode step for all in-flight requests.
-        Returns True if any work was done."""
+
+        Returns the step's event stream (StepEvents): TokenEvents for every
+        token generated this step, FinishEvents for requests retired this
+        step (plus any cancellations since the last step), RejectEvents for
+        admission sheds. `events.did_work` is True if any work was done —
+        use it (not event-list truthiness) for idle detection."""
         now = time.perf_counter() if now is None else now
         admitted = self._admit_and_prefill(now)
         prefilled = self._prefill_work()
@@ -525,21 +732,26 @@ class BatchedServingEngine(EngineCore):
         for r in self.running:
             if r.done:
                 r.state = "done"
+                if r.finish_reason is None:
+                    r.finish_reason = "length"
                 r.t_done = time.perf_counter()
-                self._slot_pos[r.slot, :] = -1
-                self._free.append(r.slot)
+                self._release_slot(r)
                 self.finished.append(r)
                 self.tbt.close(r.rid)
+                self._emit(FinishEvent(rid=r.rid, reason=r.finish_reason,
+                                       n_tokens=len(r.tokens), t=r.t_done))
             else:
                 still.append(r)
         self.running = still
-        return did_work
+        return StepEvents(self.drain_events(), did_work)
 
-    def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
-        """Drive step() until queue + prefilling + running are all empty."""
+    def run_until_drained(self, max_steps: int = 10_000) -> Deque[Request]:
+        """Thin compat wrapper over the event stream: drive step() until
+        queue + prefilling + running are all empty, discarding the events
+        (every token is still recorded on its Request), and return the
+        finished-request records."""
         for _ in range(max_steps):
             self.step()
-            if not self.running and not self.prefilling \
-                    and not len(self.queue):
+            if self.idle:
                 break
         return self.finished

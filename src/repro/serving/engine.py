@@ -33,11 +33,19 @@ The module is split into:
 
   * ``EngineCore`` — the shared execution substrate (host store, device
     residency split, jitted per-layer kernels, one scheduler + residency
-    pair). Kernels are written batch-agnostic: every decode-side op is
-    row-wise deterministic, so a [B,1,d] batched step reproduces B
-    independent [1,1,d] steps bit-exactly (the invariant the
-    continuous-batching front-end in ``serving/batching.py`` is built on).
-  * ``MoEServingEngine`` — the paper-scope single-request engine.
+    pair) plus the EVENT SINK every front-end shares: generated tokens are
+    emitted as ``TokenEvent`` records (serving/api.py) and drained by the
+    caller — ``MoEServingEngine.serve()`` assembles its RequestResult from
+    the stream, ``BatchedServingEngine.step()`` returns it as StepEvents,
+    and the ``ServingFrontend`` routes it to live RequestHandles. Kernels
+    are written batch-agnostic: every decode-side op is row-wise
+    deterministic, so a [B,1,d] batched step reproduces B independent
+    [1,1,d] steps bit-exactly (the invariant the continuous-batching
+    front-end in ``serving/batching.py`` is built on).
+  * ``MoEServingEngine`` — the paper-scope single-request engine. Its
+    ``serve()`` takes a ``SamplingParams`` (temperature, max_new_tokens,
+    stop-token early termination, seed); the legacy ``max_new=`` kwarg is
+    compat sugar.
 """
 from __future__ import annotations
 
@@ -60,6 +68,7 @@ from repro.models import layers as L
 from repro.models import moe_layer as M
 from repro.models.layers import PDT
 from repro.models.model import attn_dims
+from repro.serving.api import Event, SamplingParams, TokenEvent
 
 
 @dataclasses.dataclass
@@ -72,6 +81,7 @@ class RequestResult:
     e2e_wall: float
     hits: int
     misses: int
+    finish_reason: str = "length"   # length | stop_token | cancelled
 
 
 class EngineCore:
@@ -110,6 +120,10 @@ class EngineCore:
         self.temperature = temperature
         self.prefill_chunk_size = prefill_chunk
         self._rng = np.random.default_rng(sample_seed)
+        # event sink: every generated token is emitted as a TokenEvent; the
+        # front-ends (serve(), BatchedServingEngine.step()) assemble their
+        # outputs from this stream rather than from side-channel state
+        self._events: List[Event] = []
         sc = StateConstructor(stats) if stats is not None else None
         # ONE ledger per engine: the residency is built first, then the
         # scheduler shares it by reference (sched.cache IS self.cache).
@@ -353,6 +367,18 @@ class EngineCore:
         active = [sorted(s) for s in active_sets]
         return logits, (kc, vc), active, paths
 
+    # -- event stream --------------------------------------------------------
+    def _emit(self, ev: Event) -> None:
+        self._events.append(ev)
+
+    def drain_events(self) -> List[Event]:
+        """Take (and clear) every event emitted since the last drain.
+        `BatchedServingEngine.step()` drains into its StepEvents return;
+        `MoEServingEngine.serve()` drains to assemble its RequestResult;
+        the ServingFrontend drains at cancellation sites."""
+        evs, self._events = self._events, []
+        return evs
+
     def _sample(self, logits) -> int:
         return self.sample_row(np.asarray(logits, np.float64)[0],
                                self.temperature, self._rng)
@@ -371,7 +397,14 @@ class EngineCore:
 
 class MoEServingEngine(EngineCore):
     """Single-request engine (paper scope): one prompt at a time, KV cache
-    private to the request, decode loop runs the full dual-phase schedule."""
+    private to the request, decode loop runs the full dual-phase schedule.
+    Tokens flow through the EngineCore event sink: ``decode`` emits a
+    TokenEvent per step and ``serve`` assembles its RequestResult from the
+    drained stream (the same records the batched front-end emits)."""
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self._serve_rid = 0   # event-stream rid per serve() call
 
     def prefill(self, tokens: np.ndarray):
         """tokens: [1, S]. Returns (next_token, kv_caches, active_per_layer,
@@ -379,7 +412,15 @@ class MoEServingEngine(EngineCore):
         logits, kv, active, paths = self.prefill_layers(tokens)
         return self._sample(logits), kv, active, paths
 
-    def decode(self, first_token: int, kv, prompt_len: int, max_new: int):
+    def decode(self, first_token: int, kv, prompt_len: int, max_new: int, *,
+               stop_ids: Sequence[int] = (), rid: int = 0,
+               temperature: Optional[float] = None, rng=None):
+        """Decode up to `max_new` tokens after `first_token`, emitting a
+        TokenEvent per token; a token in `stop_ids` terminates the loop
+        early (the stop token itself is still emitted). Returns
+        (tokens [T<=max_new], trace [T, L, k], pred_trace [T, L, k])."""
+        temp = self.temperature if temperature is None else temperature
+        rng = self._rng if rng is None else rng
         kc, vc = kv
         cap = prompt_len + max_new + 1
         Wpad = cap
@@ -392,6 +433,7 @@ class MoEServingEngine(EngineCore):
         out = [first_token]
         trace = np.zeros((max_new, self.L, self.k), np.int32)
         pred_trace = np.full((max_new, self.L, self.k), -1, np.int32)
+        n_dec = 0
         for t in range(max_new):
             tok = jnp.asarray([[out[-1]]], jnp.int32)
             x = self.dev["embed"].at[tok].get(mode="clip")
@@ -429,24 +471,66 @@ class MoEServingEngine(EngineCore):
             # accumulate until the ledger's all-pinned growth branch fires
             self.sched.end_layer(self.L - 1)
             logits = self._head(self.dev["ln_f"], self.dev["embed"], x[:, -1])
-            out.append(self._sample(logits))
-        return np.asarray(out[1:]), trace, pred_trace
+            tok = self.sample_row(np.asarray(logits, np.float64)[0], temp,
+                                  rng)
+            out.append(tok)
+            n_dec = t + 1
+            self._emit(TokenEvent(rid=rid, token=tok, index=n_dec,
+                                  t=time.perf_counter()))
+            if tok in stop_ids:
+                break
+        return (np.asarray(out[1:]), trace[:n_dec], pred_trace[:n_dec])
 
-    def serve(self, prompt: np.ndarray, max_new: int = 16) -> RequestResult:
+    def serve(self, prompt: np.ndarray, max_new: int = 16, *,
+              params: Optional[SamplingParams] = None) -> RequestResult:
+        """Serve one prompt end to end — a thin wrapper over the event
+        stream: prefill and decode emit TokenEvents through the engine
+        sink, and the returned RequestResult's token array is assembled
+        from the drained stream. Legacy `max_new=` is compat sugar for
+        `params=SamplingParams(max_new_tokens=...)` (which also carries
+        temperature, stop_token_ids, and seed)."""
+        if params is None:
+            params = SamplingParams(max_new_tokens=max_new)
+        temp = (self.temperature if params.temperature is None
+                else params.temperature)
+        rng = (np.random.default_rng(params.seed)
+               if params.seed is not None else self._rng)
+        rid = self._serve_rid
+        self._serve_rid += 1
         self.sched.begin_request()
         h0, m0 = self.sched.cache.hits, self.sched.cache.misses
+        self.drain_events()
         t0 = time.perf_counter()
         prompt = np.asarray(prompt, np.int32).reshape(1, -1)
-        first, kv, active, _ = self.prefill(prompt)
+        logits, kv, active, _ = self.prefill_layers(prompt)
+        first = self.sample_row(np.asarray(logits, np.float64)[0], temp, rng)
         t1 = time.perf_counter()
-        toks, trace, pred = self.decode(first, kv, prompt.shape[1], max_new)
+        self._emit(TokenEvent(rid=rid, token=first, index=0, t=t1,
+                              first=True))
+        if first in params.stop_token_ids:
+            trace = np.zeros((0, self.L, self.k), np.int32)
+            pred = np.full((0, self.L, self.k), -1, np.int32)
+        else:
+            _, trace, pred = self.decode(
+                first, kv, prompt.shape[1], params.max_new_tokens,
+                stop_ids=params.stop_token_ids, rid=rid,
+                temperature=temp, rng=rng)
         t2 = time.perf_counter()
+        events = self.drain_events()
+        tokens = np.asarray([e.token for e in events
+                             if isinstance(e, TokenEvent)], np.int64)
+        reason = ("stop_token" if params.stop_token_ids and tokens.size
+                  and int(tokens[-1]) in params.stop_token_ids else "length")
+        # no FinishEvent here: serve() is synchronous, so completion is the
+        # return itself (finish_reason below) — an emitted event could never
+        # be observed before this same method drained it
         return RequestResult(
-            tokens=np.concatenate([[first], toks]),
+            tokens=tokens,
             prefill_active=active, decode_trace=trace, pred_trace=pred,
             ttft_wall=t1 - t0, e2e_wall=t2 - t0,
             hits=self.sched.cache.hits - h0,
-            misses=self.sched.cache.misses - m0)
+            misses=self.sched.cache.misses - m0,
+            finish_reason=reason)
 
 
 def collect_traces(cfg: ArchConfig, params, prompts: Sequence[np.ndarray],

@@ -1,0 +1,193 @@
+"""Streaming request-handle front-end over the continuous-batching engine.
+
+The production-shaped serving interface (cf. vLLM-style serving stacks):
+callers submit a typed ``GenerationRequest`` and get back a live
+``RequestHandle`` — an iterator that yields tokens as the engine emits
+them, with ``.status``, ``.result()``, and ``.cancel()``. Everything is
+cooperative and thread-free: ``ServingFrontend.poll()`` runs exactly one
+engine ``step()`` and routes its event stream (``serving/api.py``) to the
+right handles; iterating a handle polls on the caller's behalf until its
+next token lands. Because ``poll()`` advances the WHOLE engine
+deterministically, the token sequence each handle yields at temperature 0
+is bit-identical for every poll/read schedule — and identical to
+``run_until_drained()`` on the same workload (tests/test_frontend.py).
+
+    fe = ServingFrontend(BatchedServingEngine(cfg, params, ...))
+    h = fe.submit(GenerationRequest(prompt=ids,
+                                    params=SamplingParams(max_new_tokens=32),
+                                    ttft_slo=0.5, priority=1))
+    for tok in h:                  # streams; first iteration shows TTFT
+        if deadline_blown():
+            h.cancel()             # frees KV slot + expert budget NOW
+            break
+    r = h.result()                 # RequestResult (partial if cancelled)
+
+Cancellation is synchronous: when ``cancel()`` returns, the request's KV
+slot is back in the free pool, its expert-residency contributions are
+dropped from the shared ledger, its TBT-ledger entry is closed, and the
+handle is terminal — the engine will never emit another event for it.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterator, List, Optional
+
+import numpy as np
+
+from repro.serving.api import (Event, FinishEvent, GenerationRequest,
+                               RejectEvent, StepEvents, TokenEvent)
+from repro.serving.batching import BatchedServingEngine, Request
+from repro.serving.engine import RequestResult
+
+
+class RequestHandle:
+    """Live handle for one submitted request.
+
+    tokens: generated token ids received so far (grows as the engine runs).
+    events: this request's full event stream (Token/Finish/Reject).
+    Iterating the handle yields each generated token exactly once, driving
+    ``frontend.poll()`` cooperatively while the next token is pending, and
+    stops at the request's FinishEvent (or Reject/cancel).
+    """
+
+    def __init__(self, frontend: "ServingFrontend", req: Request):
+        self._fe = frontend
+        self.req = req
+        self.rid = req.rid
+        self.tokens: List[int] = []
+        self.events: List[Event] = []
+        self.finish_reason: Optional[str] = None  # incl. 'rejected'
+        self._cursor = 0
+
+    # -- state ---------------------------------------------------------------
+    @property
+    def status(self) -> str:
+        """Engine-side lifecycle state: queued | prefilling | running |
+        done | rejected | cancelled."""
+        return self.req.state
+
+    @property
+    def done(self) -> bool:
+        """Terminal: finished, rejected, or cancelled — no further events
+        will ever arrive for this handle."""
+        return self.finish_reason is not None
+
+    # -- event delivery (called by the frontend dispatcher) ------------------
+    def _on_event(self, ev: Event) -> None:
+        assert not self.done, \
+            f"event {ev} for terminal request {self.rid} (engine bug)"
+        self.events.append(ev)
+        if isinstance(ev, TokenEvent):
+            self.tokens.append(ev.token)
+        elif isinstance(ev, FinishEvent):
+            self.finish_reason = ev.reason
+        elif isinstance(ev, RejectEvent):
+            self.finish_reason = "rejected"
+
+    # -- streaming -----------------------------------------------------------
+    def __iter__(self) -> Iterator[int]:
+        return self
+
+    def __next__(self) -> int:
+        polls = 0
+        while self._cursor >= len(self.tokens) and not self.done:
+            ev = self._fe.poll()
+            polls += 1
+            if not ev.did_work and self._fe.idle and not self.done:
+                raise RuntimeError(
+                    f"request {self.rid} cannot advance: engine idle")
+            assert polls < 1_000_000, "handle iteration did not progress"
+        if self._cursor < len(self.tokens):
+            tok = self.tokens[self._cursor]
+            self._cursor += 1
+            return tok
+        raise StopIteration
+
+    # -- completion ----------------------------------------------------------
+    def result(self, max_steps: int = 100_000) -> RequestResult:
+        """Drive the engine until this request is terminal and return its
+        RequestResult (partial tokens + finish_reason='cancelled' for a
+        cancelled request). Raises for a rejected request — it never ran."""
+        for _ in range(max_steps):
+            if self.done:
+                break
+            self._fe.poll()
+        assert self.done, f"request {self.rid} not terminal in {max_steps}"
+        if self.finish_reason == "rejected":
+            raise RuntimeError(
+                f"request {self.rid} was rejected at admission (SLO shed)")
+        return self.req.result()
+
+    def cancel(self) -> bool:
+        """Cancel this request (see BatchedServingEngine.cancel). When this
+        returns True the handle is terminal, the engine has reclaimed the
+        request's KV slot / expert-residency / TBT-ledger resources, and no
+        further events will ever arrive. False if already terminal."""
+        return self._fe.cancel(self)
+
+
+class ServingFrontend:
+    """Event-driven front-end owning the engine step loop.
+
+    One cooperative driver: each ``poll()`` runs one ``engine.step()`` and
+    dispatches the resulting events to the submitted handles. No threads —
+    callers interleave ``poll()`` with their own logic (or just iterate a
+    handle / call ``result()`` and let the handle poll for them).
+    """
+
+    def __init__(self, engine: BatchedServingEngine):
+        self.engine = engine
+        self._handles: Dict[int, RequestHandle] = {}
+
+    def submit(self, spec, **kw) -> RequestHandle:
+        """Submit a GenerationRequest (or a raw prompt array plus
+        GenerationRequest fields as kwargs); returns its RequestHandle."""
+        if isinstance(spec, GenerationRequest):
+            assert not kw, ("kwargs are ignored when a full "
+                            "GenerationRequest is passed — set the fields "
+                            "on the spec instead")
+        else:
+            spec = GenerationRequest(
+                prompt=np.asarray(spec, np.int32).reshape(-1), **kw)
+        req = self.engine.submit_request(spec)
+        handle = RequestHandle(self, req)
+        self._handles[req.rid] = handle
+        return handle
+
+    @property
+    def idle(self) -> bool:
+        return self.engine.idle
+
+    def poll(self, now: Optional[float] = None) -> StepEvents:
+        """Advance the engine one step and deliver its events."""
+        events = self.engine.step(now)
+        self._dispatch(events)
+        return events
+
+    def _dispatch(self, events) -> None:
+        for ev in events:
+            handle = self._handles.get(ev.rid)
+            if handle is None:
+                continue  # raw-engine submission or already-reaped handle
+            handle._on_event(ev)
+            if handle.done:
+                # terminal handles receive nothing further — reap the route
+                # so a long-running server's dispatch table stays bounded
+                del self._handles[ev.rid]
+
+    def cancel(self, handle: RequestHandle) -> bool:
+        if handle.done:
+            return False
+        ok = self.engine.cancel(handle.req)
+        # the engine emitted FinishEvent('cancelled') synchronously; deliver
+        # it now so the handle is terminal the moment cancel() returns
+        self._dispatch(StepEvents(self.engine.drain_events()))
+        return ok
+
+    def drain(self, max_steps: int = 100_000) -> None:
+        """Poll until the engine is idle (the frontend analogue of
+        ``run_until_drained``; callers read results off the handles they
+        kept from ``submit``)."""
+        for _ in range(max_steps):
+            if self.idle:
+                break
+            self.poll()

@@ -1,0 +1,246 @@
+"""Streaming request-handle front-end invariants (ISSUE 4 tentpole):
+
+  * Streaming equivalence — for ANY schedule of poll() calls, the token
+    sequence each RequestHandle yields at temperature 0 is bit-identical to
+    run_until_drained() output for the same prompts (chunked prefill +
+    mid-flight admission included).
+  * Cancellation safety — a cancelled request never emits further events,
+    its KV slot and expert-residency/TBT-ledger resources are reclaimed
+    synchronously (within the cancel call, i.e. well within one step), the
+    freed slot is reused, expert HBM stays at the fixed
+    capacity * bytes_per_expert bound after every step (the
+    test_residency.py assertion), and surviving requests' tokens are
+    bit-exact vs a never-cancelled run.
+"""
+import jax
+import numpy as np
+import pytest
+
+from test_residency import assert_residency_invariants
+
+from repro.configs.base import get_config, reduced
+from repro.models.model import build
+from repro.serving.api import (FinishEvent, GenerationRequest,
+                               SamplingParams)
+from repro.serving.batching import BatchedServingEngine
+from repro.serving.engine import MoEServingEngine
+from repro.serving.frontend import ServingFrontend
+
+MAX_NEW = 4
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_config("mixtral_8x7b"))
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+               for n in (12, 16, 9, 14)]
+    seq = MoEServingEngine(cfg, params, policy="duo", temperature=0.0)
+    refs = [seq.serve(p, max_new=MAX_NEW) for p in prompts]
+    return cfg, params, prompts, refs
+
+
+def _make(cfg, params, *, max_batch=2, prefill_budget=None):
+    eng = BatchedServingEngine(cfg, params, policy="duo",
+                               max_batch=max_batch, max_seq=32,
+                               temperature=0.0,
+                               prefill_budget=prefill_budget)
+    return eng, ServingFrontend(eng)
+
+
+def _submit_all(fe, prompts):
+    return [fe.submit(GenerationRequest(
+        prompt=p, params=SamplingParams(max_new_tokens=MAX_NEW)))
+        for p in prompts]
+
+
+# three very different poll()/read interleavings ---------------------------
+def _drive_exhaust_each(fe, handles):
+    """Fully stream handle 0 to completion, then handle 1, ..."""
+    return [list(h) for h in handles]
+
+
+def _drive_round_robin(fe, handles):
+    """One token from each live handle in turn (max interleaving)."""
+    outs = [[] for _ in handles]
+    iters = [iter(h) for h in handles]
+    live = list(range(len(handles)))
+    while live:
+        for i in list(live):
+            try:
+                outs[i].append(next(iters[i]))
+            except StopIteration:
+                live.remove(i)
+    return outs
+
+
+def _drive_drain_then_read(fe, handles):
+    """Poll everything to completion first, read token buffers after."""
+    fe.drain()
+    return [h.tokens for h in handles]
+
+
+DRIVERS = [_drive_exhaust_each, _drive_round_robin, _drive_drain_then_read]
+
+
+@pytest.mark.parametrize("budget", [None, 3])
+@pytest.mark.parametrize("driver", DRIVERS, ids=lambda d: d.__name__[7:])
+def test_streaming_equivalence_any_poll_schedule(setup, budget, driver):
+    """Every poll/read schedule yields run_until_drained()'s exact tokens —
+    monolithic AND chunked prefill, with mid-flight admission (4 requests
+    through 2 KV slots)."""
+    cfg, params, prompts, refs = setup
+    eng, fe = _make(cfg, params, max_batch=2, prefill_budget=budget)
+    handles = _submit_all(fe, prompts)
+    outs = driver(fe, handles)
+    for i, (h, out) in enumerate(zip(handles, outs)):
+        np.testing.assert_array_equal(np.asarray(out), refs[i].tokens,
+                                      err_msg=f"handle {i} diverged")
+        assert h.finish_reason == "length"
+        assert h.status == "done"
+        r = h.result()
+        np.testing.assert_array_equal(r.tokens, refs[i].tokens)
+    assert fe.idle
+
+
+@pytest.mark.parametrize("cancel_at", [1, 3])
+def test_cancel_mid_decode(setup, cancel_at):
+    """Cancel a decoding request after `cancel_at` tokens: synchronous
+    reclamation, slot reuse, per-step residency/HBM invariants, survivors
+    bit-exact, and silence after the FinishEvent."""
+    cfg, params, prompts, refs = setup
+    eng, fe = _make(cfg, params, max_batch=4)
+    handles = _submit_all(fe, prompts[:3])
+    victim = handles[1]
+    while len(victim.tokens) < cancel_at:
+        fe.poll()
+        assert_residency_invariants(eng.cache)
+    vslot = victim.req.slot
+    # a step can emit two tokens for a request (first + one decode), so
+    # record the actual prefix length at the instant of cancellation
+    n_cancel = len(victim.tokens)
+    assert n_cancel >= cancel_at
+    assert victim.cancel()
+    # terminal the moment cancel() returns; resources already reclaimed
+    assert victim.done and victim.finish_reason == "cancelled"
+    assert victim.status == "cancelled"
+    assert isinstance(victim.events[-1], FinishEvent)
+    assert vslot in eng._free
+    assert victim.req.pf_k is None and victim.req.active_sets is None
+    assert victim.req.rid not in eng.tbt._last        # ledger entry closed
+    assert_residency_invariants(eng.cache)
+    assert not victim.cancel()                        # idempotent
+    # freed slot is immediately reusable by a new submission
+    fresh = fe.submit(GenerationRequest(
+        prompt=prompts[3], params=SamplingParams(max_new_tokens=MAX_NEW)))
+    fe.poll()
+    assert fresh.req.slot == vslot
+    n_ev = len(victim.events)
+    while not fe.idle:
+        ev = fe.poll()
+        assert not [e for e in ev if e.rid == victim.rid], \
+            "cancelled request emitted after its FinishEvent"
+        assert_residency_invariants(eng.cache)
+    assert len(victim.events) == n_ev
+    # survivors and the slot-reuser are bit-exact vs never-cancelled runs
+    for i, h in ((0, handles[0]), (2, handles[2]), (3, fresh)):
+        np.testing.assert_array_equal(h.result().tokens, refs[i].tokens,
+                                      err_msg=f"survivor {i} perturbed")
+    # cancelled partial result: exactly the tokens emitted before cancel
+    r = victim.result()
+    assert r.finish_reason == "cancelled"
+    np.testing.assert_array_equal(r.tokens, refs[1].tokens[:n_cancel])
+
+
+@pytest.mark.parametrize("polls_before_cancel", [1, 2])
+def test_cancel_mid_prefill(setup, polls_before_cancel):
+    """Cancel while a request is still prefilling in chunks: its KV slot
+    and chunk buffers are freed, its accumulated expert contributions leave
+    the shared ledger, and everything else stays bit-exact."""
+    cfg, params, prompts, refs = setup
+    eng, fe = _make(cfg, params, max_batch=4, prefill_budget=2)
+    handles = _submit_all(fe, prompts[:3])
+    # rr rotation: rid1 (16 tokens, budget 2/step) stays prefilling longest
+    victim = handles[1]
+    for _ in range(polls_before_cancel):
+        fe.poll()
+        assert_residency_invariants(eng.cache)
+    assert victim.status == "prefilling"
+    assert victim.req.prefill_remaining > 0
+    vslot = victim.req.slot
+    assert victim.cancel()
+    assert victim.done and victim.finish_reason == "cancelled"
+    assert vslot in eng._free
+    assert victim.req.pf_k is None and victim.req.pf_v is None
+    assert victim.req.active_sets is None
+    assert_residency_invariants(eng.cache)
+    assert victim.tokens == []                 # never produced a token
+    fresh = fe.submit(GenerationRequest(
+        prompt=prompts[3], params=SamplingParams(max_new_tokens=MAX_NEW)))
+    fe.poll()
+    assert fresh.req.slot == vslot             # freed KV slot reused
+    while not fe.idle:
+        ev = fe.poll()
+        assert not [e for e in ev if e.rid == victim.rid]
+        assert_residency_invariants(eng.cache)
+    for i, h in ((0, handles[0]), (2, handles[2]), (3, fresh)):
+        np.testing.assert_array_equal(h.result().tokens, refs[i].tokens,
+                                      err_msg=f"survivor {i} perturbed")
+    # cancelled before any token: the partial result has no TTFT
+    r = victim.result()
+    assert r.tokens.size == 0 and np.isnan(r.ttft_wall)
+
+
+def test_cancel_queued_request(setup):
+    """Cancelling before admission just dequeues: no slot was ever held,
+    the request never runs, later submissions are unaffected."""
+    cfg, params, prompts, refs = setup
+    eng, fe = _make(cfg, params, max_batch=1)
+    h0 = fe.submit(GenerationRequest(
+        prompt=prompts[0], params=SamplingParams(max_new_tokens=MAX_NEW)))
+    h1 = fe.submit(GenerationRequest(
+        prompt=prompts[1], params=SamplingParams(max_new_tokens=MAX_NEW)))
+    fe.poll()                                   # h0 takes the only slot
+    assert h1.status == "queued"
+    assert h1.cancel()
+    assert h1.status == "cancelled" and len(eng.queue) == 0
+    assert h1.req.slot == -1
+    fe.drain()
+    np.testing.assert_array_equal(h0.result().tokens, refs[0].tokens)
+    assert h1.tokens == []
+
+
+def test_rejected_handle(setup):
+    """An admission-shed request's handle turns terminal with
+    finish_reason='rejected'; result() raises (it never ran)."""
+    from repro.core.qos import AdmissionController, LatencyModel
+    from repro.serving.batching import RequestQueue
+    cfg, params, prompts, _ = setup
+    queue = RequestQueue(AdmissionController(
+        LatencyModel(prefill_per_token=100.0), default_ttft_slo=0.1))
+    eng = BatchedServingEngine(cfg, params, policy="duo", max_batch=2,
+                               max_seq=32, queue=queue, temperature=0.0)
+    fe = ServingFrontend(eng)
+    h = fe.submit(GenerationRequest(
+        prompt=prompts[0], params=SamplingParams(max_new_tokens=2)))
+    fe.poll()
+    assert h.done and h.finish_reason == "rejected"
+    assert h.status == "rejected" and h.tokens == []
+    with pytest.raises(RuntimeError, match="rejected"):
+        h.result()
+
+
+def test_handle_streams_stop_token(setup):
+    """Stop-token termination streams exactly the stopped prefix and the
+    handle reports finish_reason='stop_token'."""
+    cfg, params, prompts, refs = setup
+    stop = int(refs[0].tokens[2])
+    eng, fe = _make(cfg, params, max_batch=2)
+    h = fe.submit(GenerationRequest(
+        prompt=prompts[0],
+        params=SamplingParams(max_new_tokens=MAX_NEW,
+                              stop_token_ids=(stop,))))
+    assert list(h) == refs[0].tokens[:3].tolist()
+    assert h.finish_reason == "stop_token"

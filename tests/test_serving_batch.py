@@ -2,7 +2,10 @@
 single-request engine at temperature 0, chunked prefill must be bit-exact vs
 monolithic for EVERY chunk size (including mid-prefill decode interleaving),
 and the shared-cache ledger must count distinct experts per step
-(decode-plan union semantics)."""
+(decode-plan union semantics). Also the typed-API layer: SamplingParams
+plumbing, stop-token early termination, priority admission order, srf
+prefill fairness, per-request tbt_slo admission, and the step() event
+stream (streaming equivalence + cancellation live in test_frontend.py)."""
 import jax
 import numpy as np
 import pytest
@@ -12,7 +15,10 @@ from repro.core.qos import (Admission, AdmissionController, LatencyModel,
                             TBTLedger)
 from repro.core.scheduler import union_selection
 from repro.models.model import build
-from repro.serving.batching import BatchedServingEngine, RequestQueue
+from repro.serving.api import (FinishEvent, GenerationRequest, RejectEvent,
+                               SamplingParams, TokenEvent)
+from repro.serving.batching import (BatchedServingEngine, Request,
+                                    RequestQueue)
 from repro.serving.engine import MoEServingEngine
 
 MAX_NEW = 4
@@ -350,8 +356,9 @@ def test_admission_queue_verdict_keeps_fifo():
     assert ctl.decide(0.0, 0.0, 40, 0) is Admission.REJECT   # hopeless
 
     q = RequestQueue(ctl)
-    r0 = Request(rid=0, prompt=np.zeros(16, np.int32), max_new=2, arrival=0.0)
-    r1 = Request(rid=1, prompt=np.zeros(16, np.int32), max_new=2, arrival=0.0)
+    sp = SamplingParams(max_new_tokens=2)
+    r0 = Request(rid=0, prompt=np.zeros(16, np.int32), params=sp, arrival=0.0)
+    r1 = Request(rid=1, prompt=np.zeros(16, np.int32), params=sp, arrival=0.0)
     q.submit(r0)
     q.submit(r1)
     admitted = q.pop_admissible(now=0.0, limit=2)
@@ -400,6 +407,182 @@ def test_admission_controller_slo():
     # no SLO -> always admit
     assert fast.decide(0.0, 0.0, 10, 0) is Admission.ADMIT
     assert fast.decide(0.0, 0.0, 10, 10**6, ttft_slo=30.0) is Admission.ADMIT
+
+
+def test_priority_orders_admission():
+    """pop_admissible honors GenerationRequest.priority: candidates are
+    considered in stable (priority desc, arrival) order, so a later
+    high-priority arrival is admitted ahead of earlier low-priority ones
+    and equal priorities keep FIFO."""
+    q = RequestQueue(AdmissionController())     # no SLO: always admit
+    sp = SamplingParams(max_new_tokens=2)
+    for rid, prio in enumerate([0, 5, 0, 5, 1]):
+        q.submit(Request(rid=rid, prompt=np.zeros(4, np.int32), params=sp,
+                         arrival=float(rid), priority=prio))
+    first = q.pop_admissible(now=10.0, limit=2)
+    assert [r.rid for r in first] == [1, 3]     # prio 5, arrival order
+    rest = q.pop_admissible(now=10.0, limit=5)
+    assert [r.rid for r in rest] == [4, 0, 2]   # prio 1, then FIFO zeros
+    assert not q.pending and not q.rejected
+
+
+def test_priority_admission_end_to_end(setup):
+    """A high-priority late submission wins the only free KV slot."""
+    cfg, params, prompts, refs = setup
+    eng = BatchedServingEngine(cfg, params, policy="duo", max_batch=1,
+                               max_seq=32, temperature=0.0)
+    lo = eng.submit(prompts[0], max_new=2, priority=0)
+    hi = eng.submit(prompts[1], max_new=2, priority=3)
+    eng.step()
+    assert hi.state == "running" and lo.state == "queued"
+    eng.run_until_drained()
+    assert [r.rid for r in eng.finished] == [hi.rid, lo.rid]
+
+
+def test_srf_fairness_shortest_first(setup):
+    """prefill_fairness='srf' spends the budget on the request with the
+    least prefill remaining — a short straggler overtakes long backlogs —
+    and stays bit-exact. Prompt lengths: rid0=12, rid1=16, rid2=9, rid3=14.
+    """
+    cfg, params, prompts, refs = setup
+    eng = BatchedServingEngine(cfg, params, policy="duo", max_batch=4,
+                               max_seq=32, temperature=0.0,
+                               prefill_budget=4, prefill_fairness="srf")
+    for p in prompts:
+        eng.submit(p, max_new=MAX_NEW)
+    eng.step()          # shortest (rid2, 9 tokens) gets the whole budget
+    assert {r.rid: r.prefill_pos for r in eng.prefilling} == \
+        {0: 0, 1: 0, 2: 4, 3: 0}
+    eng.step()          # rid2 still shortest remaining (5)
+    assert {r.rid: r.prefill_pos for r in eng.prefilling} == \
+        {0: 0, 1: 0, 2: 8, 3: 0}
+    eng.step()          # rid2 finishes (1 token), 3 spill to rid0 (12)
+    assert {r.rid: r.prefill_pos for r in eng.prefilling} == \
+        {0: 3, 1: 0, 3: 0}
+    finished = sorted(eng.run_until_drained(), key=lambda r: r.rid)
+    assert len(finished) == len(prompts)
+    for i, r in enumerate(finished):
+        np.testing.assert_array_equal(r.result().tokens, refs[i].tokens)
+        assert r.prefill_active == refs[i].prefill_active
+
+
+def test_stop_token_early_termination(setup):
+    """A token in SamplingParams.stop_token_ids terminates the request
+    early — the stop token itself is still emitted (prefix bit-exact vs the
+    un-stopped reference) — on BOTH the single-request and batched paths."""
+    cfg, params, prompts, refs = setup
+    stop = int(refs[0].tokens[2])
+    sp = SamplingParams(max_new_tokens=MAX_NEW, stop_token_ids=(stop,))
+
+    seq = MoEServingEngine(cfg, params, policy="duo", temperature=0.0)
+    r = seq.serve(prompts[0], params=sp)
+    assert r.finish_reason == "stop_token"
+    np.testing.assert_array_equal(r.tokens, refs[0].tokens[:3])
+    assert r.decode_trace.shape[0] == 2      # traces truncated with tokens
+
+    eng = BatchedServingEngine(cfg, params, policy="duo", max_batch=2,
+                               max_seq=32, temperature=0.0)
+    req = eng.submit(prompts[0], sp)
+    other = eng.submit(prompts[1], max_new=MAX_NEW)
+    eng.run_until_drained()
+    assert req.finish_reason == "stop_token"
+    np.testing.assert_array_equal(req.result().tokens, refs[0].tokens[:3])
+    # the surviving row is untouched by its batchmate's early exit
+    np.testing.assert_array_equal(other.result().tokens, refs[1].tokens)
+    assert other.finish_reason == "length"
+
+
+def test_step_event_stream(setup):
+    """step() returns the per-step event stream: TokenEvents for every
+    token (first= marks TTFT), FinishEvents at retirement, and did_work
+    distinguishing real work from idle steps. The stream IS the output:
+    tokens reassembled from events match the request records exactly."""
+    cfg, params, prompts, refs = setup
+    eng = BatchedServingEngine(cfg, params, policy="duo", max_batch=2,
+                               max_seq=32, temperature=0.0)
+    r0 = eng.submit(prompts[0], max_new=MAX_NEW)
+    r1 = eng.submit(prompts[1], max_new=MAX_NEW)
+    ev = eng.step()
+    assert ev.did_work
+    firsts = [e for e in ev if isinstance(e, TokenEvent) and e.first]
+    assert [(e.rid, e.index, e.first) for e in firsts] == \
+        [(0, 0, True), (1, 0, True)]
+    streams = {0: [], 1: []}
+    finishes = {}
+    for e in ev:
+        if isinstance(e, TokenEvent):
+            streams[e.rid].append(e.token)
+    while not eng.idle:
+        for e in eng.step():
+            if isinstance(e, TokenEvent):
+                assert not e.first
+                streams[e.rid].append(e.token)
+            elif isinstance(e, FinishEvent):
+                finishes[e.rid] = e
+    for rid, req in ((0, r0), (1, r1)):
+        assert streams[rid] == req.tokens
+        np.testing.assert_array_equal(np.asarray(streams[rid]),
+                                      refs[rid].tokens)
+        assert finishes[rid].reason == "length"
+        assert finishes[rid].n_tokens == MAX_NEW + 1
+    idle = eng.step()
+    assert not idle.did_work and list(idle) == []
+
+
+def test_reject_event_emitted(setup):
+    """Admission sheds surface as RejectEvents in the step stream."""
+    cfg, params, prompts, _ = setup
+    queue = RequestQueue(AdmissionController(
+        LatencyModel(prefill_per_token=100.0), default_ttft_slo=0.1))
+    eng = BatchedServingEngine(cfg, params, policy="duo", max_batch=2,
+                               max_seq=32, queue=queue, temperature=0.0)
+    doomed = eng.submit(prompts[0], max_new=2)
+    ev = eng.step()
+    rejects = [e for e in ev if isinstance(e, RejectEvent)]
+    assert [e.rid for e in rejects] == [doomed.rid]
+    assert doomed.state == "rejected"
+
+
+def test_admission_rejects_unmeetable_tbt():
+    """A per-request tbt_slo below the structurally achievable per-step gap
+    is REJECTED outright (waiting never shrinks the steady-state gap); an
+    achievable one admits. The chunk charged is what the engine would run:
+    min(current budget, suggest_chunk(tbt_slo))."""
+    ctl = AdmissionController(
+        LatencyModel(prefill_per_token=0.1, decode_step=0.5))
+    assert ctl.decide(0.0, 0.0, 8, 0, tbt_slo=0.4) is Admission.REJECT
+    assert ctl.n_rejected == 1
+    assert ctl.decide(0.0, 0.0, 8, 0, tbt_slo=0.6) is Admission.ADMIT
+    # FIXED budget 10: the engine really runs 10-token chunks, so the gap
+    # is 0.5 + 10*0.1 = 1.5s and a 1.0s target is structurally unmeetable
+    assert ctl.decide(0.0, 0.0, 8, 0, chunk_budget=10,
+                      tbt_slo=1.0) is Admission.REJECT
+    # ADAPTIVE budget: the engine will shrink its chunk to this request's
+    # tbt_slo (suggest_chunk(1.0) == 5), which fits exactly -> admit
+    assert ctl.decide(0.0, 0.0, 8, 0, chunk_budget=10, tbt_slo=1.0,
+                      chunk_adaptive=True) is Admission.ADMIT
+    assert ctl.decide(0.0, 0.0, 8, 0, chunk_budget=10, tbt_slo=0.50,
+                      chunk_adaptive=True) is Admission.REJECT  # floor busts
+    assert ctl.model.predict_tbt(5) == pytest.approx(1.0)
+    assert ctl.model.predict_tbt(None) == pytest.approx(0.5)
+
+
+def test_auto_budget_respects_request_tbt_slo(setup):
+    """prefill_budget='auto' tightens the chunk to the minimum tbt_slo
+    across in-flight requests, not just the engine default."""
+    cfg, params, prompts, refs = setup
+    eng = BatchedServingEngine(cfg, params, policy="duo", max_batch=2,
+                               max_seq=32, temperature=0.0,
+                               prefill_budget="auto", tbt_slo=100.0)
+    m = eng.queue.admission.model
+    assert eng._current_budget() == m.suggest_chunk(100.0)
+    tight = eng.submit(prompts[0], max_new=2, tbt_slo=0.25)
+    eng.step()
+    assert tight.state in ("prefilling", "running")
+    assert eng._current_budget() == \
+        eng.queue.admission.model.suggest_chunk(0.25)
+    eng.run_until_drained()
+    np.testing.assert_array_equal(tight.result().tokens, refs[0].tokens[:3])
 
 
 def test_queue_sheds_breached_requests(setup):
