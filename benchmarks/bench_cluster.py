@@ -1,0 +1,291 @@
+"""Cluster-layer benchmark: replicas x router policy under non-stationary
+arrivals (serving/cluster.py).
+
+Sweeps a ReplicaPool of N BatchedServingEngine replicas behind each router
+policy (round_robin / least_loaded / slo_headroom / expert_affinity) and
+offers the same workload — alternating LONG and SHORT prompts, arriving by
+the chosen process (default: bursty Gamma-renewal clumps, the regime where
+load-oblivious routing falls over; see benchmarks.common.arrival_offsets).
+Alternating lengths are round-robin's blind spot: with 2 replicas it sends
+every long prompt to the same replica while the other idles through shorts,
+so the long-prompt TTFT tail measures exactly what load/SLO-aware dispatch
+buys. Per (replicas, router) run it reports:
+
+  * TTFT p50/p99 and TPOT p50/p99 over completed requests
+  * SLO attainment: fraction of OFFERED requests that completed with
+    TTFT <= --ttft-slo (sheds count as misses)
+  * shed rate, split by source: router rejections (slo_headroom found no
+    capable replica), per-replica admission rejections, autopilot sheds
+  * per-replica request balance and expert-HBM accounting — device bytes
+    must equal ``pool_capacity * bytes_per_expert`` with zero regrows on
+    EVERY replica (the PR-3 bound, now per replica)
+
+``--smoke`` (CI) runs a tiny sweep and asserts the acceptance criteria:
+a 1-replica cluster is bit-exact vs a plain ServingFrontend at temperature
+0, every replica's expert HBM stays at the fixed bound, and slo_headroom
+or expert_affinity beats round_robin on p99 TTFT or SLO attainment at 2
+replicas under bursty arrivals.
+
+  PYTHONPATH=src python -m benchmarks.bench_cluster \
+      --replicas 1,2 --routers round_robin,slo_headroom \
+      --arrival bursty --requests 12 [--autopilot] [--smoke]
+"""
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+from benchmarks.common import ARRIVALS, arrival_offsets  # noqa: E402
+
+from repro.configs.base import get_config, reduced  # noqa: E402
+from repro.core.qos import percentile_report  # noqa: E402
+from repro.serving.api import GenerationRequest, SamplingParams  # noqa: E402
+from repro.serving.batching import (BatchedServingEngine,  # noqa: E402
+                                    parse_prefill_budget)
+from repro.serving.cluster import (ClusterFrontend, QosAutopilot,  # noqa: E402
+                                   ReplicaPool, ROUTERS)
+from repro.serving.frontend import ServingFrontend  # noqa: E402
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
+
+
+def make_prompts(n: int, long_len: int, short_len: int, vocab: int,
+                 seed: int = 11):
+    """Alternating long/short prompts — the workload shape that exposes
+    size-oblivious routing."""
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, vocab,
+                         size=(long_len if i % 2 == 0 else short_len))
+            .astype(np.int32) for i in range(n)]
+
+
+def warm_pool(pool: ReplicaPool, prompts) -> None:
+    """Compile each replica's kernels outside the measurement window: one
+    long + one short prompt per replica (both final-chunk shapes, decode
+    batch sizes 1-2) — and seed every replica's EWMA LatencyModel with real
+    costs so slo_headroom predictions are honest from the first request."""
+    longest = max(prompts, key=len)
+    shortest = min(prompts, key=len)
+    for fe in pool.frontends:
+        fe.submit(GenerationRequest(prompt=longest,
+                                    params=SamplingParams(max_new_tokens=1)))
+        fe.submit(GenerationRequest(prompt=shortest,
+                                    params=SamplingParams(max_new_tokens=1)))
+        fe.drain()
+
+
+def hbm_report(pool: ReplicaPool) -> list:
+    out = []
+    for eng in pool.engines:
+        res = eng.cache
+        bound = res.pool_capacity * res.bytes_per_expert
+        out.append({
+            "device_bytes": int(res.device_bytes),
+            "bound_bytes": int(bound),
+            "regrow_events": int(res.regrow_events),
+            "ok": bool(res.hbm_bound_ok),
+        })
+    return out
+
+
+def run_cluster(cfg, params, prompts, *, n_replicas: int, router: str,
+                rate: float, arrival: str, max_new: int, max_batch: int,
+                policy: str, prefill_budget, ttft_slo, tbt_slo,
+                autopilot: bool, seed: int = 0, warm: bool = True) -> dict:
+    pool = ReplicaPool.build(
+        cfg, params, n_replicas, policy=policy, max_batch=max_batch,
+        max_seq=max(len(p) for p in prompts) + max_new + 2,
+        prefill_budget=prefill_budget, tbt_slo=tbt_slo, temperature=0.0)
+    if warm:
+        warm_pool(pool, prompts)
+    fe = ClusterFrontend(pool, router=router)
+    ap = QosAutopilot(fe) if autopilot else None
+
+    rng = np.random.default_rng(seed)
+    t0 = time.perf_counter()
+    arrivals = t0 + arrival_offsets(arrival, rate, len(prompts), rng)
+    pending = list(zip(arrivals, prompts))
+    handles = []
+    while pending or not fe.idle:
+        now = time.perf_counter()
+        while pending and pending[0][0] <= now:
+            arr, p = pending.pop(0)
+            handles.append(fe.submit(GenerationRequest(
+                prompt=p, params=SamplingParams(max_new_tokens=max_new),
+                ttft_slo=ttft_slo, tbt_slo=tbt_slo, arrival=arr)))
+        ev = fe.poll(now)
+        if not ev.did_work and pending:
+            time.sleep(max(pending[0][0] - time.perf_counter(), 0.0))
+    wall = time.perf_counter() - t0
+
+    done = [h for h in handles
+            if h.finish_reason in ("length", "stop_token")]
+    results = [h.req.result() for h in done]
+    ttfts = [r.ttft_wall for r in results]
+    tpots = [(r.e2e_wall - r.ttft_wall) / max(len(r.tokens) - 1, 1)
+             for r in results]
+    n_adm_rej = sum(len(e.queue.rejected) for e in pool.engines)
+    n_router_rej = fe.n_router_rejected
+    n_shed = ap.n_shed if ap else 0
+    offered = len(prompts)
+    rec = {
+        "replicas": n_replicas,
+        "router": router,
+        "arrival": arrival,
+        "rate_req_s": rate,
+        "offered": offered,
+        "completed": len(done),
+        "router_rejected": n_router_rej,
+        "admission_rejected": n_adm_rej,
+        "autopilot_shed": n_shed,
+        "shed_rate": (n_router_rej + n_adm_rej + n_shed) / offered,
+        "ttft": percentile_report(ttfts),
+        "tpot": percentile_report(tpots),
+        "tokens_per_s": sum(len(r.tokens) for r in results) / max(wall, 1e-9),
+        "balance": [sum(1 for h in handles if h.replica == i)
+                    for i in range(n_replicas)],
+        "per_replica_hbm": hbm_report(pool),
+        "wall_s": wall,
+    }
+    if ttft_slo is not None:
+        rec["slo_attainment"] = sum(
+            1 for r in results if r.ttft_wall <= ttft_slo) / offered
+    return rec
+
+
+def parity_check(cfg, params, prompts, *, max_new: int, max_batch: int,
+                 policy: str, prefill_budget, routers) -> None:
+    """1-replica cluster == plain ServingFrontend, bit-exact at temp 0,
+    for every router policy (no SLOs: tokens must not depend on wall
+    time)."""
+    max_seq = max(len(p) for p in prompts) + max_new + 2
+    eng = BatchedServingEngine(cfg, params, policy=policy,
+                               max_batch=max_batch, max_seq=max_seq,
+                               prefill_budget=prefill_budget,
+                               temperature=0.0)
+    base = ServingFrontend(eng)
+    ref = [base.submit(GenerationRequest(
+        prompt=p, params=SamplingParams(max_new_tokens=max_new)))
+        for p in prompts]
+    base.drain()
+    for router in routers:
+        pool = ReplicaPool.build(cfg, params, 1, policy=policy,
+                                 max_batch=max_batch, max_seq=max_seq,
+                                 prefill_budget=prefill_budget,
+                                 temperature=0.0)
+        fe = ClusterFrontend(pool, router=router)
+        got = [fe.submit(GenerationRequest(
+            prompt=p, params=SamplingParams(max_new_tokens=max_new)))
+            for p in prompts]
+        fe.drain()
+        for r, g in zip(ref, got):
+            assert list(r.tokens) == list(g.tokens), \
+                f"1-replica cluster diverged under {router}"
+        for h in hbm_report(pool):
+            assert h["ok"], f"expert-HBM bound violated: {h}"
+        print(f"  parity OK: 1-replica {router} == ServingFrontend "
+              f"({len(prompts)} requests)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    ap.add_argument("--replicas", default="1,2")
+    ap.add_argument("--routers", default=",".join(ROUTERS))
+    ap.add_argument("--arrival", default="bursty", choices=list(ARRIVALS))
+    ap.add_argument("--rate", type=float, default=20.0,
+                    help="mean offered load (req/s); bursty clumps it")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=4)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--long-len", type=int, default=40)
+    ap.add_argument("--short-len", type=int, default=6)
+    ap.add_argument("--policy", default="duo+")
+    ap.add_argument("--prefill-budget", default="4")
+    ap.add_argument("--ttft-slo", type=float, default=2.0)
+    ap.add_argument("--tbt-slo", type=float, default=None)
+    ap.add_argument("--autopilot", action="store_true",
+                    help="attach the QosAutopilot (mid-flight SLO shedding)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI sweep asserting 1-replica parity, the "
+                         "per-replica expert-HBM bound, and an SLO/"
+                         "affinity-router win over round_robin")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    if args.smoke:
+        args.replicas, args.requests, args.max_new = "2", 10, 3
+        args.routers = "round_robin,slo_headroom,expert_affinity"
+
+    cfg = reduced(get_config(args.arch))
+    from repro.models.model import build
+    params = build(cfg).init(jax.random.PRNGKey(0))
+    prompts = make_prompts(args.requests, args.long_len, args.short_len,
+                           cfg.vocab)
+    budget = parse_prefill_budget(args.prefill_budget)
+    routers = args.routers.split(",")
+
+    print("1-replica parity check:")
+    parity_check(cfg, params, prompts[:4], max_new=args.max_new,
+                 max_batch=args.max_batch, policy=args.policy,
+                 prefill_budget=budget,
+                 routers=routers if args.smoke else routers[:1])
+
+    print(f"\n{'repl':>4s} {'router':>16s} {'done':>4s} {'shed':>4s} "
+          f"{'ttft_p50':>9s} {'ttft_p99':>9s} {'tpot_p99':>9s} "
+          f"{'attain':>6s} {'balance':>12s} {'hbm':>4s}")
+    records = []
+    for n_rep in [int(r) for r in args.replicas.split(",")]:
+        for router in routers:
+            rec = run_cluster(
+                cfg, params, prompts, n_replicas=n_rep, router=router,
+                rate=args.rate, arrival=args.arrival, max_new=args.max_new,
+                max_batch=args.max_batch, policy=args.policy,
+                prefill_budget=budget, ttft_slo=args.ttft_slo,
+                tbt_slo=args.tbt_slo,
+                autopilot=args.autopilot or args.smoke)
+            records.append(rec)
+            hbm_ok = all(h["ok"] for h in rec["per_replica_hbm"])
+            att = rec.get("slo_attainment", float("nan"))
+            n_shed = (rec["router_rejected"] + rec["admission_rejected"]
+                      + rec["autopilot_shed"])
+            print(f"{n_rep:4d} {router:>16s} {rec['completed']:4d} "
+                  f"{n_shed:4d} {rec['ttft']['p50']:8.3f}s "
+                  f"{rec['ttft']['p99']:8.3f}s {rec['tpot']['p99']:8.3f}s "
+                  f"{att:6.2f} {str(rec['balance']):>12s} "
+                  f"{'ok' if hbm_ok else 'VIOLATED':>4s}")
+            assert hbm_ok, \
+                f"per-replica expert-HBM bound violated: {rec['per_replica_hbm']}"
+
+    if args.smoke:
+        by = {(r["replicas"], r["router"]): r for r in records}
+        rr = by[(2, "round_robin")]
+        wins = []
+        for name in ("slo_headroom", "expert_affinity"):
+            c = by[(2, name)]
+            wins.append(c["ttft"]["p99"] < rr["ttft"]["p99"])
+            wins.append(c.get("slo_attainment", 0.0)
+                        > rr.get("slo_attainment", 0.0))
+        assert any(wins), (
+            "neither slo_headroom nor expert_affinity beat round_robin on "
+            f"p99 TTFT or SLO attainment: {json.dumps(records, indent=1)}")
+        print("\nbench_cluster smoke OK: QoS-aware routing beats "
+              "round_robin under bursty arrivals; per-replica expert HBM "
+              "bounded; 1-replica cluster bit-exact")
+
+    out = args.out
+    if out is None:
+        os.makedirs(RESULTS, exist_ok=True)
+        out = os.path.join(RESULTS, "cluster_router.json")
+    with open(out, "w") as f:
+        json.dump(records, f, indent=1)
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

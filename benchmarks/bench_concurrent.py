@@ -1,4 +1,5 @@
-"""Concurrent-load QoS benchmark: Poisson arrivals into the streaming
+"""Concurrent-load QoS benchmark: request arrivals (``--arrival``: poisson /
+bursty / ramp, see benchmarks.common.arrival_offsets) into the streaming
 serving front-end, p50/p99 TTFT + TPOT vs offered load — plus per-request
 TBT-SLO attainment and mid-flight cancellation latency, both measured off
 the event stream.
@@ -25,10 +26,14 @@ streaming tokens through ``RequestHandle``s. Per offered load it reports:
 import argparse
 import json
 import os
+import sys
 import time
 
 import jax
 import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+from benchmarks.common import ARRIVALS, arrival_offsets  # noqa: E402
 
 from repro.configs.base import get_config, reduced
 from repro.core.qos import AdmissionController, percentile_report
@@ -45,15 +50,15 @@ RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
 def run_load(cfg, params, prompts, *, rate: float, max_new: int,
              max_batch: int, policy: str, ttft_slo, seed: int = 0,
              prefill_budget=None, tbt_slo=None, fairness="rr",
-             cancel_frac: float = 0.0, cancel_after: int = 2) -> dict:
-    """Offer `prompts` at Poisson rate `rate` req/s through a
-    ServingFrontend; drain; summarize. With cancel_frac > 0, an evenly
-    spread fraction of requests is cancelled mid-flight once it has
-    streamed `cancel_after` tokens."""
+             cancel_frac: float = 0.0, cancel_after: int = 2,
+             arrival: str = "poisson") -> dict:
+    """Offer `prompts` at mean rate `rate` req/s through a ServingFrontend
+    (arrival process: poisson / bursty / ramp — benchmarks.common); drain;
+    summarize. With cancel_frac > 0, an evenly spread fraction of requests
+    is cancelled mid-flight once it has streamed `cancel_after` tokens."""
     rng = np.random.default_rng(seed)
-    inter = rng.exponential(1.0 / rate, size=len(prompts))
     t0 = time.perf_counter()
-    arrivals = t0 + np.cumsum(inter)
+    arrivals = t0 + arrival_offsets(arrival, rate, len(prompts), rng)
 
     queue = RequestQueue(AdmissionController(default_ttft_slo=ttft_slo))
     eng = BatchedServingEngine(cfg, params, policy=policy,
@@ -109,6 +114,7 @@ def run_load(cfg, params, prompts, *, rate: float, max_new: int,
     total_tokens = sum(len(r.tokens) for r in done)
     rec = {
         "rate_req_s": rate,
+        "arrival": arrival,
         "offered": len(prompts),
         "completed": len(done),
         "rejected": len(eng.queue.rejected),
@@ -138,6 +144,9 @@ def main():
     ap.add_argument("--arch", default="mixtral-8x7b")
     ap.add_argument("--rates", default="0.5,2.0",
                     help="comma list of offered loads (requests/s)")
+    ap.add_argument("--arrival", default="poisson", choices=list(ARRIVALS),
+                    help="arrival process: stationary poisson, bursty "
+                         "(Gamma-renewal clumping), or a linear rate ramp")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=5)
     ap.add_argument("--max-batch", type=int, default=4)
@@ -181,7 +190,8 @@ def main():
                        prefill_budget=parse_prefill_budget(args.prefill_budget),
                        tbt_slo=args.tbt_slo, fairness=args.fairness,
                        cancel_frac=args.cancel_frac,
-                       cancel_after=args.cancel_after)
+                       cancel_after=args.cancel_after,
+                       arrival=args.arrival)
         records.append(rec)
         att = rec.get("tbt_attain_mean", float("nan"))
         ttc = rec.get("time_to_cancel", {}).get("p99", float("nan"))

@@ -9,6 +9,11 @@ Pipeline per (paper model, dataset):
   4. Serve held-out requests with each policy through the same engine to get
      real routing + hit/miss behaviour, then replay through the two-stream
      simulator with the full-scale model's costs (§VI).
+
+Also home to the shared arrival-process generators (`arrival_offsets`):
+poisson / bursty (Gamma-renewal, MMPP-like clumping) / ramp, used by
+bench_concurrent and bench_cluster so router and admission policies are
+compared under non-stationary load, not just stationary Poisson.
 """
 from __future__ import annotations
 
@@ -37,6 +42,43 @@ from repro.serving.engine import MoEServingEngine, collect_traces
 RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
 POLICIES = ("odf", "lfp", "mif", "duo", "duo+")
 DATASETS = ("squad", "orca")
+ARRIVALS = ("poisson", "bursty", "ramp")
+
+
+def arrival_offsets(kind: str, rate: float, n: int,
+                    rng: np.random.Generator, *,
+                    burstiness: float = 16.0,
+                    ramp_span: float = 4.0) -> np.ndarray:
+    """Cumulative arrival-time offsets (seconds from t0) for `n` requests
+    at mean offered load `rate` req/s. Three processes, same mean rate:
+
+      * "poisson" — exponential renewal (CV^2 = 1), the stationary baseline.
+      * "bursty"  — Gamma renewal with shape 1/burstiness, so inter-arrival
+        CV^2 = `burstiness`: most gaps are near zero (requests clump into
+        bursts) separated by long quiet stretches — a renewal approximation
+        of an on/off Markov-modulated Poisson process, the regime where
+        load-oblivious routing falls over.
+      * "ramp"    — non-stationary Poisson whose instantaneous rate grows
+        linearly across the n arrivals with a ramp_span^2 start-to-end
+        ratio, rescaled so the MEAN offered load is `rate` (the absolute
+        endpoints land near — not exactly at — rate/ramp_span and
+        rate*ramp_span; admission/routing must track the drift).
+    """
+    assert rate > 0 and n >= 1
+    if kind == "poisson":
+        inter = rng.exponential(1.0 / rate, size=n)
+    elif kind == "bursty":
+        shape = 1.0 / burstiness
+        inter = rng.gamma(shape, (1.0 / rate) / shape, size=n)
+    elif kind == "ramp":
+        shape = np.linspace(1.0 / ramp_span, ramp_span, n)
+        # normalize so the EXPECTED total span is n/rate — the ramp changes
+        # the instantaneous rate profile, not the mean offered load
+        rates = shape * (rate * (1.0 / shape).sum() / n)
+        inter = rng.exponential(1.0 / rates)
+    else:
+        raise KeyError(f"unknown arrival process {kind!r} (have {ARRIVALS})")
+    return np.cumsum(inter)
 
 
 def dataset_spec(name: str, vocab: int):

@@ -1,7 +1,9 @@
 """Streaming serving demo: concurrent requests through the request-handle
 front-end (spec -> handle -> events) vs the same requests served one-by-one,
-with token-parity verification, a live mid-flight cancellation, and an
-SLO-shedding illustration.
+with token-parity verification, a live mid-flight cancellation, and both
+SLO-shedding layers — admission rejection and the QosAutopilot's mid-flight
+"slo_shed" cancellation (serving/cluster.py; see examples/serve_cluster.py
+for the multi-replica layer above this).
 
 The serving API in three moves:
 
@@ -34,6 +36,7 @@ from repro.models.model import build
 from repro.serving.api import GenerationRequest, SamplingParams
 from repro.serving.batching import (BatchedServingEngine, RequestQueue,
                                     parse_prefill_budget)
+from repro.serving.cluster import QosAutopilot
 from repro.serving.engine import MoEServingEngine
 from repro.serving.frontend import ServingFrontend
 
@@ -150,7 +153,13 @@ def main():
         assert surv_ok, "cancellation perturbed the surviving request"
         assert victim.finish_reason == "cancelled"
 
-    # [SLO shedding] a pessimistic cost model + tight deadline -> reject
+    # [SLO shedding] two layers close the QoS loop:
+    #  * admission: a pessimistic cost model + tight deadline -> the queue
+    #    rejects the request before it ever takes a KV slot;
+    #  * QosAutopilot (serving/cluster.py): requests that WERE admitted but
+    #    whose deadline becomes unmeetable mid-flight are shed
+    #    automatically with reason="slo_shed" — no hand-rolled
+    #    deadline-watching + h.cancel() loop in caller code anymore.
     queue = RequestQueue(AdmissionController(
         LatencyModel(prefill_per_token=10.0), default_ttft_slo=1.0))
     shed = BatchedServingEngine(cfg, params, policy=args.policy,
@@ -160,12 +169,32 @@ def main():
     doomed = fe3.submit(GenerationRequest(
         prompt=prompts[0], params=SamplingParams(max_new_tokens=2)))
     fe3.poll()
-    print(f"SLO demo: {len(queue.rejected)} request(s) shed "
+    print(f"SLO demo: {len(queue.rejected)} request(s) shed at admission "
           f"(predicted TTFT over a 1s deadline); handle status: "
           f"{doomed.status}")
 
+    fe4 = ServingFrontend(BatchedServingEngine(
+        cfg, params, policy=args.policy, max_batch=2, max_seq=64,
+        temperature=0.0))
+    autopilot = QosAutopilot(fe4)
+    laggard = fe4.submit(GenerationRequest(
+        prompt=prompts[0], params=SamplingParams(max_new_tokens=16),
+        tbt_slo=0.3))
+    while len(laggard.tokens) < 2 and not laggard.done:
+        fe4.poll()
+    # scan with a clock far past the next token's 300ms deadline — in a
+    # real deployment the poll loop's own wall clock does this
+    fe4.poll(time.perf_counter() + 100.0)
+    print(f"autopilot demo: laggard shed mid-decode after "
+          f"{len(laggard.tokens)} tokens (reason={laggard.finish_reason}, "
+          f"shed counts={autopilot.by_reason}, engine n_slo_shed="
+          f"{fe4.engine.n_slo_shed})")
+
     if args.smoke:
         assert doomed.finish_reason == "rejected"
+        assert laggard.finish_reason == "slo_shed"
+        assert autopilot.n_shed == 1
+        assert laggard.req.slot in fe4.engine._free
         print("serve_concurrent smoke OK")
 
 

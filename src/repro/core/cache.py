@@ -112,6 +112,14 @@ class CacheState:
     def touch(self, key: ExpertKey) -> None:
         self.resident.move_to_end(key)
 
+    def residency_overlap(self, keys: Iterable[ExpertKey]) -> int:
+        """How many of `keys` are resident right now. A read-only scoring
+        probe — no LRU touch, no hit/miss accounting, no events — so the
+        cluster router's expert-affinity policy can rank replicas by live
+        cache overlap without perturbing the replayable event stream."""
+        resident = self.resident
+        return sum(1 for k in keys if k in resident)
+
     def lookup(self, key: ExpertKey, t: float = 0.0) -> bool:
         if key in self.resident:
             self.hits += 1
@@ -360,3 +368,14 @@ class ExpertResidency(CacheState):
     def device_bytes(self) -> int:
         """Actual expert HBM footprint — the fixed pool allocation."""
         return sum(p.nbytes for p in self._pools.values())
+
+    @property
+    def hbm_bound_ok(self) -> bool:
+        """THE expert-HBM bound predicate (one definition for tests,
+        benches, and examples): device bytes equal the fixed
+        ``capacity * bytes_per_expert`` allocation and the pool never
+        regrew past the capacity it was sized with."""
+        return (self.device_bytes
+                == self.pool_capacity * self.bytes_per_expert
+                and self.regrow_events == 0
+                and self.pool_capacity == self.capacity)

@@ -15,6 +15,14 @@ also runs one batched decode step for the in-flight decoders, so predicted
 TTFT = queue wait + (backlog + own) prefill cost + #iterations x decode-step
 interference. `TBTLedger` records the dual metric — per-request inter-token
 gaps — which chunking bounds and monolithic prefill blows through.
+
+Cluster routing (serving/cluster.py): `ReplicaLoad` is one engine replica's
+load snapshot (queue depth, prefill backlog, outstanding decode tokens,
+free KV slots) — the signal the least-loaded router ranks by — and
+`AdmissionController.headroom` scores how much margin a candidate request's
+SLOs would have on that replica (the slo_headroom routing policy: dispatch
+to the replica with the most margin, reject only when every replica is
+negative).
 """
 from __future__ import annotations
 
@@ -228,6 +236,26 @@ class TBTLedger:
         return rep
 
 
+@dataclasses.dataclass(frozen=True)
+class ReplicaLoad:
+    """One engine replica's load snapshot (serving/cluster.py routing
+    signal). All token counts are OUTSTANDING work, not historical: what
+    the replica still has to do for everything it has accepted."""
+    queue_depth: int        # requests waiting in the arrival queue
+    queued_tokens: int      # their prompt tokens (prefill not started)
+    prefill_backlog: int    # prompt tokens left for admitted 'prefilling'
+    running: int            # requests in batched decode
+    decode_backlog: int     # decode tokens outstanding (incl. prefilling
+    #                         requests' full decode budget — committed work)
+    free_slots: int         # KV slots available for new admissions
+
+    @property
+    def total_tokens(self) -> int:
+        """Scalar load score: every token of work the replica has accepted
+        but not yet produced (the least-loaded router's ranking key)."""
+        return self.queued_tokens + self.prefill_backlog + self.decode_backlog
+
+
 class Admission(enum.Enum):
     ADMIT = "admit"
     QUEUE = "queue"      # keep waiting: deadline still reachable later
@@ -370,3 +398,30 @@ class AdmissionController:
             return Admission.QUEUE
         self.n_rejected += 1
         return Admission.REJECT
+
+    def headroom(self, now: float, arrival: float, prompt_len: int,
+                 backlog_tokens: int, *,
+                 ttft_slo: Optional[float] = None,
+                 tbt_slo: Optional[float] = None,
+                 running_batch: int = 0,
+                 chunk_budget: Optional[int] = None,
+                 chunk_adaptive: bool = False) -> float:
+        """Worst-case SLO margin (seconds) this replica would leave the
+        candidate: min over its deadlines of (slo - prediction). Positive =
+        every deadline predicted met with that much slack; negative = at
+        least one predicted breached; +inf when the request carries no SLO
+        (then only load can rank replicas). The slo_headroom router
+        dispatches to the max-headroom replica and rejects only when NO
+        replica is non-negative."""
+        h = float("inf")
+        if tbt_slo is not None:
+            cb = chunk_budget
+            if cb is not None and chunk_adaptive:
+                cb = min(cb, self.model.suggest_chunk(tbt_slo))
+            h = min(h, tbt_slo - self.model.predict_tbt(cb))
+        slo = ttft_slo if ttft_slo is not None else self.default_ttft_slo
+        if slo is not None:
+            h = min(h, slo - self.predict_ttft(
+                now, arrival, prompt_len, backlog_tokens,
+                running_batch=running_batch, chunk_budget=chunk_budget))
+        return h

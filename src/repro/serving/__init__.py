@@ -1,7 +1,19 @@
-"""DuoServe-MoE serving runtime: spec -> handle -> events.
+"""DuoServe-MoE serving runtime: spec -> handle -> events -> cluster.
 
 The public serving surface, top down:
 
+  * ``cluster`` — the multi-replica tier (LLM-as-a-Service scope):
+    ``ReplicaPool`` holds N independent ``BatchedServingEngine`` replicas
+    (each with its own KV slots, queue, scheduler, and ExpertResidency)
+    behind a pluggable ``Router`` — ``round_robin`` / ``least_loaded`` /
+    ``slo_headroom`` (max SLO margin, reject only if NO replica can meet
+    the deadlines) / ``expert_affinity`` (overlap between the request's
+    likely-expert set and each replica's live residency).
+    ``ClusterFrontend`` keeps the exact single-engine surface below, and
+    ``QosAutopilot`` (attachable to either front-end) sheds requests whose
+    TTFT/TBT deadline is already unmeetable mid-flight
+    (``FinishEvent(reason="slo_shed")``, resources reclaimed
+    synchronously).
   * ``api`` — the typed vocabulary: ``SamplingParams`` (frozen sampling
     spec: temperature, max_new_tokens, stop_token_ids, seed),
     ``GenerationRequest`` (prompt + params + ttft_slo/tbt_slo QoS targets +
@@ -26,13 +38,18 @@ The public serving surface, top down:
 
 Determinism contract: at temperature 0 every front-end — handle streams
 under ANY poll() schedule, ``run_until_drained()``, single-request
-``serve()`` — yields bit-identical tokens for the same prompt, including
-chunked prefill, mid-flight admission, and batches shrunk by cancellation
-(tests/test_serving_batch.py, tests/test_frontend.py).
+``serve()``, and a ClusterFrontend of ANY replica count under any router —
+yields bit-identical tokens for the same prompt, including chunked
+prefill, mid-flight admission, and batches shrunk by cancellation
+(tests/test_serving_batch.py, tests/test_frontend.py,
+tests/test_cluster.py).
 """
 from repro.serving.api import (Event, FinishEvent,  # noqa: F401
                                GenerationRequest, RejectEvent,
                                SamplingParams, StepEvents, TokenEvent)
+from repro.serving.cluster import (ClusterFrontend, QosAutopilot,  # noqa: F401
+                                   ReplicaPool, Router, ROUTERS,
+                                   make_router)
 from repro.serving.engine import (EngineCore, MoEServingEngine,  # noqa: F401
                                   RequestResult, collect_traces)
 from repro.serving.frontend import (RequestHandle,  # noqa: F401

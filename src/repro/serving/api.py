@@ -81,6 +81,19 @@ class GenerationRequest:
     arrival: Optional[float] = None
 
 
+def as_request_spec(spec, **kw) -> GenerationRequest:
+    """Normalize a front-end ``submit()`` input: pass a GenerationRequest
+    through untouched (field kwargs are then disallowed), or build one from
+    a raw prompt array plus GenerationRequest fields. Shared by
+    ServingFrontend and ClusterFrontend so the two surfaces cannot drift."""
+    if isinstance(spec, GenerationRequest):
+        assert not kw, ("kwargs are ignored when a full GenerationRequest "
+                        "is passed — set the fields on the spec instead")
+        return spec
+    return GenerationRequest(
+        prompt=np.asarray(spec, np.int32).reshape(-1), **kw)
+
+
 # ---------------------------------------------------------------------------
 # event stream
 # ---------------------------------------------------------------------------
@@ -100,8 +113,10 @@ class TokenEvent:
 @dataclasses.dataclass(frozen=True)
 class FinishEvent:
     """Request `rid` left the engine: reason is ``"length"`` (max_new_tokens
-    reached), ``"stop_token"``, or ``"cancelled"``. After a FinishEvent the
-    engine emits no further events for `rid` — ever."""
+    reached), ``"stop_token"``, ``"cancelled"`` (caller-initiated), or
+    ``"slo_shed"`` (QosAutopilot shed a request whose TTFT/TBT deadline was
+    already unmeetable mid-flight). After a FinishEvent the engine emits no
+    further events for `rid` — ever."""
     rid: int
     reason: str
     n_tokens: int
@@ -110,7 +125,9 @@ class FinishEvent:
 
 @dataclasses.dataclass(frozen=True)
 class RejectEvent:
-    """Request `rid` was shed at admission (predicted SLO breach)."""
+    """Request `rid` was shed before it ran: reason ``"slo"`` (engine
+    admission predicted an SLO breach) or ``"router_slo"`` (the cluster's
+    slo_headroom router found NO replica able to meet its deadlines)."""
     rid: int
     reason: str
     t: float

@@ -76,7 +76,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cache import ExpertKey
-from repro.core.qos import Admission, AdmissionController, TBTLedger
+from repro.core.qos import (Admission, AdmissionController, ReplicaLoad,
+                            TBTLedger)
 from repro.core.scheduler import DuoServeScheduler
 from repro.models.layers import PDT
 from repro.serving.api import (FinishEvent, GenerationRequest, RejectEvent,
@@ -97,7 +98,7 @@ class Request:
     priority: int = 0
     # runtime state ---------------------------------------------------------
     state: str = "queued"    # queued|prefilling|running|done|rejected|cancelled
-    finish_reason: Optional[str] = None   # length|stop_token|cancelled
+    finish_reason: Optional[str] = None  # length|stop_token|cancelled|slo_shed
     slot: int = -1
     prefill_pos: int = 0             # prompt tokens already prefilled
     tokens: List[int] = dataclasses.field(default_factory=list)
@@ -410,15 +411,20 @@ class BatchedServingEngine(EngineCore):
             arrival=arrival))
 
     # -- cancellation -------------------------------------------------------
-    def cancel(self, req: Request) -> bool:
+    def cancel(self, req: Request, reason: str = "cancelled") -> bool:
         """Cancel a request mid-flight. Synchronous and idempotent: on the
         first call a queued request is dequeued; a prefilling/running one is
         removed from its phase list, its KV slot returns to the free pool,
         its expert-residency contributions are dropped from the shared
         ledger (entries no other in-flight request also touched), and its
-        TBT-ledger entry closes. One final FinishEvent("cancelled") is
+        TBT-ledger entry closes. One final ``FinishEvent(reason)`` is
         emitted; the request NEVER emits again. Returns False if already
-        terminal."""
+        terminal.
+
+        reason: recorded as the request's finish_reason — "cancelled"
+        (caller-initiated, the default) or "slo_shed" (the QosAutopilot
+        shedding a request whose TTFT/TBT deadline is already unmeetable,
+        serving/cluster.py). Reclamation is identical for both."""
         if req.state in ("done", "rejected", "cancelled"):
             return False
         if req.state == "queued":
@@ -435,15 +441,41 @@ class BatchedServingEngine(EngineCore):
         else:  # pragma: no cover - unknown state is a bug
             raise AssertionError(f"cancel from state {req.state!r}")
         req.state = "cancelled"
-        req.finish_reason = "cancelled"
+        req.finish_reason = reason
         req.t_done = time.perf_counter()
         req.pf_k = req.pf_v = req.pf_sp = None
         req.active_sets = None
         self.tbt.close(req.rid)
         self.cancelled.append(req)
-        self._emit(FinishEvent(rid=req.rid, reason="cancelled",
+        self._emit(FinishEvent(rid=req.rid, reason=reason,
                                n_tokens=len(req.tokens), t=req.t_done))
         return True
+
+    @property
+    def n_slo_shed(self) -> int:
+        """Requests the autopilot shed mid-flight (within the retained
+        `cancelled` window) — the engine-side ledger count of
+        FinishEvent(reason="slo_shed") terminations."""
+        return sum(1 for r in self.cancelled
+                   if r.finish_reason == "slo_shed")
+
+    # -- load introspection (cluster routing, serving/cluster.py) -----------
+    def load(self) -> ReplicaLoad:
+        """Snapshot this engine's outstanding work as a ReplicaLoad
+        (core/qos.py): what the routers rank replicas by. Decode backlog
+        counts every token the engine is still committed to produce —
+        running requests' remaining budget plus prefilling requests' full
+        budget (their decode work hasn't started)."""
+        dec = sum(r.max_new + 1 - len(r.tokens) for r in self.running)
+        dec += sum(r.max_new + 1 for r in self.prefilling)
+        return ReplicaLoad(
+            queue_depth=len(self.queue),
+            queued_tokens=self.queue.queued_tokens(),
+            prefill_backlog=sum(r.prefill_remaining
+                                for r in self.prefilling),
+            running=len(self.running),
+            decode_backlog=dec,
+            free_slots=len(self._free))
 
     def _release_slot(self, req: Request) -> None:
         self._slot_pos[req.slot, :] = -1

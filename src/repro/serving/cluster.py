@@ -1,0 +1,501 @@
+"""Cluster serving layer: a ReplicaPool of engines behind a pluggable
+Router, with the QoS autopilot that closes the SLO loop.
+
+The tier above ``BatchedServingEngine`` (cf. vLLM's production-stack
+router): N independent engine replicas — each with its own KV slot pool,
+scheduler, arrival queue, and ``ExpertResidency`` — behind a routing policy
+that decides, per request, WHICH replica serves it. Because our replicas
+carry phase-specialized expert caches, routing is richer than generic load
+balancing: a replica whose residency already holds the request's likely
+experts serves it with fewer fetches, so the router is an extension of the
+paper's caching policy, not just a load spreader.
+
+Routers (``make_router``):
+
+  * ``round_robin``    — classic rotation; oblivious to load AND request
+    size, so alternating long/short workloads systematically pile the long
+    prompts onto the same replicas (the baseline the benches beat).
+  * ``least_loaded``   — min outstanding work (``ReplicaLoad.total_tokens``:
+    queued + prefill backlog + committed decode tokens), ties broken by
+    replica index.
+  * ``slo_headroom``   — route to the replica whose latency model leaves the
+    MOST margin against the request's ttft/tbt SLOs
+    (``AdmissionController.headroom``); reject only if NO replica is
+    non-negative. SLO-less requests fall back to least-loaded ranking.
+  * ``expert_affinity``— rank replicas by overlap between the request's
+    likely-expert set (decode predictor with empty history when available,
+    else trace popularity — fMoE's semantic-locality argument) and each
+    replica's live residency ledger (``CacheState.residency_overlap``);
+    load-overloaded replicas are excluded first (production-stack's
+    overload-detector-then-affinity order), ties broken by load.
+
+``ClusterFrontend`` keeps the exact PR-4 serving surface — ``submit(spec)
+-> RequestHandle``, cooperative ``poll()`` (steps ALL replicas), handle
+``.cancel()`` delegating to the owning replica — so every existing
+example/bench runs on a cluster by swapping one constructor. A request the
+router rejects gets a terminal handle with a ``RejectEvent("router_slo")``
+and never touches an engine queue.
+
+``QosAutopilot`` attaches to either front-end (cluster or plain
+``ServingFrontend``) and runs after every poll: a request whose TTFT
+deadline is unmeetable (predicted remaining prefill overruns it) or whose
+next-token TBT deadline has already passed is shed via ``handle.cancel
+(reason="slo_shed")`` — the KV slot, residency contributions, and TBT entry
+reclaimed synchronously, surfaced as ``FinishEvent(reason="slo_shed")`` and
+counted on both the autopilot and the owning engine (``n_slo_shed``).
+Survivors are bit-unaffected (tests/test_cluster.py).
+
+Determinism: at temperature 0 a 1-replica cluster is bit-identical to a
+plain ``ServingFrontend`` under every router policy, and every request
+served by ANY replica of an N-replica cluster reproduces the single-request
+engine's tokens (the row-wise exactness invariant composes across
+replicas).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import (Deque, Dict, FrozenSet, List, Optional, Sequence,
+                    Tuple, Union)
+
+import numpy as np
+
+from repro.core.cache import ExpertKey
+from repro.core.qos import AdmissionController, ReplicaLoad
+from repro.serving.api import (GenerationRequest, RejectEvent, StepEvents,
+                               as_request_spec)
+from repro.serving.batching import BatchedServingEngine, Request, RequestQueue
+from repro.serving.frontend import (CooperativeDriver, RequestHandle,
+                                    ServingFrontend)
+
+
+def likely_expert_keys(engine: BatchedServingEngine,
+                       width: Optional[int] = None
+                       ) -> FrozenSet[ExpertKey]:
+    """The decode predictor's likely-expert set for an incoming request —
+    per layer, the top-`width` (default top_k) experts the replica's
+    scheduler expects a fresh request to activate.
+
+    Before a request runs there is no activation path, so the per-layer
+    prediction uses the empty-history feature vector (popularity + layer
+    embedding dominate) when the scheduler carries the trained ExpertMLP;
+    schedulers without a predictor fall back to the trace-popularity prior
+    (MIF's request-level signal), and stat-less schedulers yield the empty
+    set — expert_affinity then degrades to pure load ranking. The set is a
+    property of the MODEL + workload, not of a replica, so the router
+    computes it once per request (all replicas share params/stats)."""
+    sched = engine.sched
+    width = width or engine.k
+    sc = getattr(sched, "state_constructor", None)
+    predictor = getattr(sched, "predictor", None)
+    stats = getattr(sched, "stats", None) or (sc.stats if sc else None)
+    keys: List[ExpertKey] = []
+    if predictor is not None and sc is not None:
+        for l in range(engine.L):
+            if l == 0:
+                if stats is not None:
+                    top = np.argsort(-stats.popularity[0])[:width]
+                    keys += [(0, int(e)) for e in top]
+                continue
+            feat = sc.features([], l)
+            top = predictor.predict_topk(feat[None], k=width)[0]
+            keys += [(l, int(e)) for e in top[:width]]
+    elif stats is not None:
+        for l in range(engine.L):
+            top = np.argsort(-stats.popularity[l])[:width]
+            keys += [(l, int(e)) for e in top]
+    return frozenset(keys)
+
+
+class Router:
+    """Routing policy: pick the replica index for a request, or None to
+    reject it outright (only ``slo_headroom`` ever rejects). Stateless
+    except for policy-owned cursors, so one router instance serves one
+    ClusterFrontend."""
+
+    name = "base"
+
+    def choose(self, spec: GenerationRequest, pool: "ReplicaPool",
+               now: float) -> Optional[int]:
+        raise NotImplementedError
+
+
+class RoundRobinRouter(Router):
+    name = "round_robin"
+
+    def __init__(self):
+        self._cursor = 0
+
+    def choose(self, spec, pool, now):
+        i = self._cursor % pool.n
+        self._cursor += 1
+        return i
+
+
+class LeastLoadedRouter(Router):
+    """Min outstanding tokens (queued + prefill backlog + committed decode);
+    ties break toward the lower replica index for determinism."""
+    name = "least_loaded"
+
+    def choose(self, spec, pool, now):
+        loads = pool.loads()
+        return min(range(pool.n),
+                   key=lambda i: (loads[i].total_tokens,
+                                  loads[i].queue_depth, i))
+
+
+class SloHeadroomRouter(Router):
+    """Max SLO margin (AdmissionController.headroom) across replicas;
+    reject (None) only when NO replica can meet the request's deadlines
+    even from an IMMEDIATE start — the same REJECT boundary admission and
+    the QosAutopilot use, so a backlog that merely has to drain first
+    (admission's QUEUE band) routes to the best replica instead of being
+    router-rejected. For SLO-less requests every headroom is +inf and the
+    load tie-break makes this least-loaded."""
+    name = "slo_headroom"
+
+    def _scores(self, spec, pool, now, with_backlog: bool
+                ) -> List[Tuple[float, int, int]]:
+        arrival = spec.arrival if spec.arrival is not None else now
+        plen = int(np.asarray(spec.prompt).reshape(-1).shape[0])
+        loads = pool.loads()
+        scored: List[Tuple[float, int, int]] = []
+        for i, eng in enumerate(pool.engines):
+            ld = loads[i]
+            backlog = (ld.queued_tokens + ld.prefill_backlog
+                       if with_backlog else 0)
+            hr = eng.queue.admission.headroom(
+                now, arrival, plen, backlog,
+                ttft_slo=spec.ttft_slo, tbt_slo=spec.tbt_slo,
+                running_batch=ld.running,
+                chunk_budget=eng._current_budget(),
+                chunk_adaptive=eng.prefill_budget == "auto")
+            scored.append((hr, ld.total_tokens, i))
+        return scored
+
+    def choose(self, spec, pool, now):
+        # rank by backlog-inclusive margin: the honest prediction of what
+        # the request will actually experience on each replica
+        best = max(self._scores(spec, pool, now, with_backlog=True),
+                   key=lambda s: (s[0], -s[1], -s[2]))
+        if best[0] >= 0:
+            return best[2]
+        # every replica breaches WITH its current backlog — reject only if
+        # the deadline is hopeless even from an immediate start everywhere
+        # (otherwise route to the best immediate-start replica and let its
+        # admission QUEUE the request while the backlog drains)
+        best0 = max(self._scores(spec, pool, now, with_backlog=False),
+                    key=lambda s: (s[0], -s[1], -s[2]))
+        if best0[0] < 0:
+            return None   # no replica can meet the request's deadlines
+        return best0[2]
+
+
+class ExpertAffinityRouter(Router):
+    """Max overlap between a fresh request's likely-expert set (shared
+    model/workload signal, see ReplicaPool.likely_keys) and the replica's
+    LIVE residency ledger, among non-overloaded replicas
+    (overload first, affinity second — production-stack's ordering, which
+    also breaks the warm-cache-wins-forever feedback loop); ties break by
+    load then index. With no predictor/stats signal the overlap is 0
+    everywhere and this degrades to least-loaded."""
+    name = "expert_affinity"
+
+    def __init__(self, overload_factor: float = 2.0):
+        self.overload_factor = overload_factor
+
+    def choose(self, spec, pool, now):
+        plen = int(np.asarray(spec.prompt).reshape(-1).shape[0])
+        loads = pool.loads()
+        floor = min(ld.total_tokens for ld in loads)
+        # a replica is overloaded when its backlog exceeds the least-loaded
+        # replica's by more than `overload_factor` x this request's own
+        # work — affinity may then not justify the queueing it would eat
+        limit = floor + self.overload_factor * max(plen, 1)
+        eligible = [i for i in range(pool.n)
+                    if loads[i].total_tokens <= limit]
+        keys = pool.likely_keys()
+        return max(eligible,
+                   key=lambda i: (pool.engines[i].cache.residency_overlap(
+                       keys), -loads[i].total_tokens, -i))
+
+
+ROUTERS = ("round_robin", "least_loaded", "slo_headroom", "expert_affinity")
+
+
+def make_router(name: Union[str, Router]) -> Router:
+    if isinstance(name, Router):
+        return name
+    name = name.lower()
+    if name == "round_robin":
+        return RoundRobinRouter()
+    if name == "least_loaded":
+        return LeastLoadedRouter()
+    if name == "slo_headroom":
+        return SloHeadroomRouter()
+    if name == "expert_affinity":
+        return ExpertAffinityRouter()
+    raise KeyError(f"unknown router {name!r} (have {ROUTERS})")
+
+
+class ReplicaPool:
+    """N independent BatchedServingEngine replicas + their per-replica
+    ServingFrontends. Replicas share NOTHING mutable: each has its own KV
+    slots, arrival queue (own AdmissionController/LatencyModel — per-replica
+    load signals stay honest), scheduler, and ExpertResidency; only the
+    host-side params/stats/predictor objects are shared, read-only."""
+
+    def __init__(self, engines: Sequence[BatchedServingEngine]):
+        assert engines, "a pool needs at least one replica"
+        for i, a in enumerate(engines):
+            for b in engines[i + 1:]:
+                assert a.queue is not b.queue, \
+                    "replicas must not share an arrival queue"
+                assert a.cache is not b.cache, \
+                    "replicas must not share an ExpertResidency"
+        self.engines = list(engines)
+        self.frontends = [ServingFrontend(e) for e in self.engines]
+        self._likely_cache: Optional[FrozenSet[ExpertKey]] = None
+
+    @classmethod
+    def build(cls, cfg, params, n_replicas: int, *,
+              default_ttft_slo: Optional[float] = None,
+              **engine_kwargs) -> "ReplicaPool":
+        """Construct `n_replicas` identical engines over shared (read-only)
+        params. `engine_kwargs` go to every BatchedServingEngine; a fresh
+        RequestQueue/AdmissionController is built per replica (passing
+        `queue=` here would alias one queue across replicas — rejected)."""
+        assert n_replicas >= 1
+        assert "queue" not in engine_kwargs, \
+            "per-replica queues are built here; pass default_ttft_slo"
+        engines = []
+        for _ in range(n_replicas):
+            q = (RequestQueue(AdmissionController(
+                default_ttft_slo=default_ttft_slo))
+                if default_ttft_slo is not None else None)
+            engines.append(BatchedServingEngine(cfg, params, queue=q,
+                                                **engine_kwargs))
+        return cls(engines)
+
+    @property
+    def n(self) -> int:
+        return len(self.engines)
+
+    def loads(self) -> List[ReplicaLoad]:
+        return [e.load() for e in self.engines]
+
+    def likely_keys(self) -> FrozenSet[ExpertKey]:
+        """The likely-expert set a FRESH request is expected to activate
+        (see likely_expert_keys). With empty-history predictor features /
+        popularity priors this is a property of the shared model + workload
+        — the same for every request — so it is computed once and cached
+        for the pool's lifetime; affinity routing therefore ranks replicas
+        by how much of this hot set each one holds RESIDENT right now (the
+        per-replica term is live, the per-request term is not — making the
+        set prompt-conditioned is an open ROADMAP item)."""
+        if self._likely_cache is None:
+            self._likely_cache = likely_expert_keys(self.engines[0])
+        return self._likely_cache
+
+
+class ClusterFrontend(CooperativeDriver):
+    """The PR-4 serving surface over a ReplicaPool: ``submit(spec) ->
+    RequestHandle``, cooperative ``poll()`` stepping every replica once (in
+    replica order — deterministic), ``cancel(handle)`` delegating to the
+    owning replica. Handles submitted here drive the CLUSTER poll when
+    iterated, so waiting on one request keeps all replicas advancing.
+
+    Router rejections (slo_headroom finding no capable replica) produce a
+    terminal handle carrying a ``RejectEvent("router_slo")`` — the request
+    never occupies any replica's queue; ``n_router_rejected`` counts them
+    for the pool's lifetime (``router_rejected`` retains a bounded window
+    of the Request records) and their negative rids keep them disjoint
+    from every replica-local rid space (replica rids start at 0 per
+    engine, so cluster-level event streams disambiguate requests by
+    HANDLE, not rid). Terminal handles are NOT retained here — the
+    per-replica dispatch tables reap them, so a long-running cluster's
+    memory stays bounded.
+    """
+
+    def __init__(self, pool: ReplicaPool,
+                 router: Union[str, Router] = "least_loaded",
+                 rejected_window: Optional[int] = 512):
+        self.pool = pool
+        self.router = make_router(router)
+        self.router_rejected: Deque[Request] = collections.deque(
+            maxlen=rejected_window)
+        self.n_router_rejected = 0
+        self.autopilot = None   # QosAutopilot registers itself here
+
+    # -- submission ----------------------------------------------------------
+    def submit(self, spec, **kw) -> RequestHandle:
+        """Route a GenerationRequest (or raw prompt + fields, as with
+        ServingFrontend.submit) to a replica and submit it there. The
+        returned handle polls the CLUSTER; its ``.replica`` records the
+        owning replica index (None for router rejections)."""
+        spec = as_request_spec(spec, **kw)
+        now = time.perf_counter()
+        if spec.arrival is None:
+            # stamp once so router scoring and the engine record agree
+            spec = dataclasses.replace(spec, arrival=now)
+        choice = self.router.choose(spec, self.pool, now)
+        if choice is None:
+            return self._reject(spec, now)
+        handle = self.pool.frontends[choice].submit(spec)
+        handle._fe = self              # iteration drives the cluster poll
+        handle.replica = choice
+        return handle
+
+    def _reject(self, spec: GenerationRequest, now: float) -> RequestHandle:
+        # negative rids keep router rejections disjoint from every
+        # replica-local rid space
+        self.n_router_rejected += 1
+        req = Request(rid=-self.n_router_rejected,
+                      prompt=np.asarray(spec.prompt, np.int32).reshape(-1),
+                      params=spec.params, arrival=spec.arrival,
+                      ttft_slo=spec.ttft_slo, tbt_slo=spec.tbt_slo,
+                      priority=spec.priority, state="rejected")
+        self.router_rejected.append(req)
+        handle = RequestHandle(self, req)
+        handle._on_event(RejectEvent(rid=req.rid, reason="router_slo",
+                                     t=now))
+        return handle
+
+    # -- cooperative driving -------------------------------------------------
+    @property
+    def idle(self) -> bool:
+        return all(fe.idle for fe in self.pool.frontends)
+
+    def poll(self, now: Optional[float] = None) -> StepEvents:
+        """One cluster iteration: step every replica once (replica order),
+        merge their event streams, then run the autopilot's shed scan —
+        shed FinishEvents("slo_shed") are appended to the returned stream.
+        NOTE: merged events carry replica-LOCAL rids; consumers that track
+        individual requests should hold their handles."""
+        events: List = []
+        did_work = False
+        for fe in self.pool.frontends:
+            ev = fe.poll(now)
+            events.extend(ev)
+            did_work |= ev.did_work
+        if self.autopilot is not None:
+            self.autopilot.scan_into(now, events)
+        return StepEvents(events, did_work)
+
+    # -- delegation ----------------------------------------------------------
+    def cancel(self, handle: RequestHandle,
+               reason: str = "cancelled") -> bool:
+        if handle.done or handle.replica is None:
+            return False
+        return self.pool.frontends[handle.replica].cancel(handle,
+                                                          reason=reason)
+
+    def live_handles(self) -> List[RequestHandle]:
+        out: List[RequestHandle] = []
+        for fe in self.pool.frontends:
+            out.extend(fe.live_handles())
+        return out
+
+    def engine_of(self, handle: RequestHandle) -> BatchedServingEngine:
+        assert handle.replica is not None, "router-rejected handle"
+        return self.pool.engines[handle.replica]
+
+
+class QosAutopilot:
+    """Per-poll SLO shed policy (ROADMAP "SLO-aware cancellation" item):
+    sheds requests whose deadline is ALREADY unmeetable mid-flight, so a
+    doomed request stops burning KV slots / prefill budget / expert
+    residency that surviving requests could meet their SLOs with.
+
+    Attaches to a ClusterFrontend or a plain ServingFrontend (it registers
+    as ``frontend.autopilot``; both run ``scan`` after each poll's event
+    dispatch and append shed FinishEvents to the poll's returned stream).
+    Two triggers, both against the owning replica's live admission
+    predictor (the SAME ``AdmissionController.predict_ttft`` that gated
+    the request at admission):
+
+      * TTFT — no first token yet, and even an IMMEDIATE start (zero
+        backlog ahead: time already waited + own remaining work + decode
+        interference) would overrun ``ttft_slo + grace`` — the admission
+        REJECT boundary, so requests admission parked in its QUEUE band
+        ("reachable once the backlog drains") are NOT shed early.
+      * TBT — first token emitted, and the NEXT token's deadline
+        (last token time + tbt_slo + grace) has already passed.
+
+    Shedding goes through ``handle.cancel(reason="slo_shed")`` — the same
+    synchronous reclamation as a caller cancel — surfaced as
+    ``FinishEvent(reason="slo_shed")`` and counted here (``n_shed``,
+    ``by_reason``; ``shed`` retains a bounded window of handles) and on
+    the owning engine (``n_slo_shed``). Requests without SLOs are never
+    touched; survivors stay bit-exact."""
+
+    def __init__(self, frontend, *, grace: float = 0.0,
+                 shed_window: Optional[int] = 512):
+        self.fe = frontend
+        self.grace = grace
+        self.shed: Deque[RequestHandle] = collections.deque(
+            maxlen=shed_window)
+        self.n_shed = 0
+        self.by_reason: Dict[str, int] = {"ttft": 0, "tbt": 0}
+        frontend.autopilot = self
+
+    def scan_into(self, now: Optional[float],
+                  events: List) -> List[RequestHandle]:
+        """scan(), then append each shed request's FinishEvent("slo_shed")
+        to `events` — the one hook both front-ends' poll() call, so the
+        returned event stream surfaces sheds identically everywhere."""
+        shed_now = self.scan(now)
+        for h in shed_now:
+            events.append(h.events[-1])
+        return shed_now
+
+    def scan(self, now: Optional[float] = None) -> List[RequestHandle]:
+        """One shed pass over the live handles; returns the handles shed by
+        THIS pass. Called automatically after each poll once attached."""
+        now = time.perf_counter() if now is None else now
+        shed_now: List[RequestHandle] = []
+        for h in self.fe.live_handles():
+            if h.done:
+                continue
+            trigger = self._verdict(h, now)
+            if trigger is None:
+                continue
+            if h.cancel(reason="slo_shed"):
+                self.shed.append(h)
+                self.n_shed += 1
+                self.by_reason[trigger] += 1
+                shed_now.append(h)
+        return shed_now
+
+    def _verdict(self, h: RequestHandle, now: float) -> Optional[str]:
+        req = h.req
+        if not h.tokens:
+            if req.ttft_slo is None:
+                return None
+            # resolve the owning engine through the handle's OWN frontend:
+            # cluster-submitted handles carry a replica index, handles
+            # submitted directly through a per-replica frontend (warm-up
+            # traffic) resolve via that frontend — and the engine is only
+            # needed at all on this SLO-carrying branch
+            eng = h._fe.engine_of(h)
+            # mirror the admission REJECT boundary exactly: shed only when
+            # even an IMMEDIATE start (zero backlog ahead) would breach the
+            # deadline — time already waited + the request's own remaining
+            # work + decode interference. Charging the live backlog here
+            # would shed every request admission deliberately parked in its
+            # QUEUE band ("deadline still reachable once the backlog
+            # drains"), turning that band into dead behavior.
+            own = (req.prefill_remaining if req.state == "prefilling"
+                   else req.prompt_len)
+            predicted = eng.queue.admission.predict_ttft(
+                now, req.arrival, own, 0,
+                running_batch=len(eng.running),
+                chunk_budget=eng._current_budget())
+            return ("ttft" if predicted > req.ttft_slo + self.grace
+                    else None)
+        if req.tbt_slo is not None and h.last_token_t is not None:
+            # the next token's deadline has passed and it hasn't arrived
+            if now - h.last_token_t > req.tbt_slo + self.grace:
+                return "tbt"
+        return None

@@ -31,10 +31,8 @@ from __future__ import annotations
 
 from typing import Dict, Iterator, List, Optional
 
-import numpy as np
-
-from repro.serving.api import (Event, FinishEvent, GenerationRequest,
-                               RejectEvent, StepEvents, TokenEvent)
+from repro.serving.api import (Event, FinishEvent, RejectEvent, StepEvents,
+                               TokenEvent, as_request_spec)
 from repro.serving.batching import BatchedServingEngine, Request
 from repro.serving.engine import RequestResult
 
@@ -49,13 +47,15 @@ class RequestHandle:
     stops at the request's FinishEvent (or Reject/cancel).
     """
 
-    def __init__(self, frontend: "ServingFrontend", req: Request):
-        self._fe = frontend
+    def __init__(self, frontend, req: Request):
+        self._fe = frontend   # ServingFrontend or cluster.ClusterFrontend
         self.req = req
         self.rid = req.rid
+        self.replica: Optional[int] = None   # set by ClusterFrontend.submit
         self.tokens: List[int] = []
         self.events: List[Event] = []
         self.finish_reason: Optional[str] = None  # incl. 'rejected'
+        self.last_token_t: Optional[float] = None  # wall time of last token
         self._cursor = 0
 
     # -- state ---------------------------------------------------------------
@@ -78,6 +78,7 @@ class RequestHandle:
         self.events.append(ev)
         if isinstance(ev, TokenEvent):
             self.tokens.append(ev.token)
+            self.last_token_t = ev.t
         elif isinstance(ev, FinishEvent):
             self.finish_reason = ev.reason
         elif isinstance(ev, RejectEvent):
@@ -117,15 +118,33 @@ class RequestHandle:
                 f"request {self.rid} was rejected at admission (SLO shed)")
         return self.req.result()
 
-    def cancel(self) -> bool:
+    def cancel(self, reason: str = "cancelled") -> bool:
         """Cancel this request (see BatchedServingEngine.cancel). When this
         returns True the handle is terminal, the engine has reclaimed the
         request's KV slot / expert-residency / TBT-ledger resources, and no
-        further events will ever arrive. False if already terminal."""
-        return self._fe.cancel(self)
+        further events will ever arrive. False if already terminal.
+        `reason` becomes the FinishEvent reason — the QosAutopilot passes
+        "slo_shed" so shed requests are distinguishable from caller
+        cancellations."""
+        return self._fe.cancel(self, reason=reason)
 
 
-class ServingFrontend:
+class CooperativeDriver:
+    """Shared cooperative poll-loop surface for any front-end exposing
+    ``poll()`` + ``idle`` (ServingFrontend here, ClusterFrontend in
+    serving/cluster.py) — one definition so the two surfaces cannot
+    drift."""
+
+    def drain(self, max_steps: int = 100_000) -> None:
+        """Poll until idle (the frontend analogue of ``run_until_drained``;
+        callers read results off the handles they kept from ``submit``)."""
+        for _ in range(max_steps):
+            if self.idle:
+                break
+            self.poll()
+
+
+class ServingFrontend(CooperativeDriver):
     """Event-driven front-end owning the engine step loop.
 
     One cooperative driver: each ``poll()`` runs one ``engine.step()`` and
@@ -137,17 +156,14 @@ class ServingFrontend:
     def __init__(self, engine: BatchedServingEngine):
         self.engine = engine
         self._handles: Dict[int, RequestHandle] = {}
+        # QosAutopilot (serving/cluster.py) registers itself here; poll()
+        # then runs its shed scan after dispatching each step's events
+        self.autopilot = None
 
     def submit(self, spec, **kw) -> RequestHandle:
         """Submit a GenerationRequest (or a raw prompt array plus
         GenerationRequest fields as kwargs); returns its RequestHandle."""
-        if isinstance(spec, GenerationRequest):
-            assert not kw, ("kwargs are ignored when a full "
-                            "GenerationRequest is passed — set the fields "
-                            "on the spec instead")
-        else:
-            spec = GenerationRequest(
-                prompt=np.asarray(spec, np.int32).reshape(-1), **kw)
+        spec = as_request_spec(spec, **kw)
         req = self.engine.submit_request(spec)
         handle = RequestHandle(self, req)
         self._handles[req.rid] = handle
@@ -158,10 +174,26 @@ class ServingFrontend:
         return self.engine.idle
 
     def poll(self, now: Optional[float] = None) -> StepEvents:
-        """Advance the engine one step and deliver its events."""
+        """Advance the engine one step and deliver its events. With a
+        QosAutopilot attached, its shed scan runs after dispatch — a shed
+        request is terminal before poll() returns, and its
+        FinishEvent("slo_shed") is appended to the returned stream so
+        event-stream consumers observe the termination too."""
         events = self.engine.step(now)
         self._dispatch(events)
+        if self.autopilot is not None:
+            self.autopilot.scan_into(now, events)
         return events
+
+    def live_handles(self) -> List[RequestHandle]:
+        """Non-terminal handles (the dispatch table reaps terminal ones) —
+        what the QosAutopilot scans."""
+        return list(self._handles.values())
+
+    def engine_of(self, handle: RequestHandle) -> BatchedServingEngine:
+        """The engine serving `handle` (trivially THE engine here; the
+        cluster front-end resolves the owning replica)."""
+        return self.engine
 
     def _dispatch(self, events) -> None:
         for ev in events:
@@ -174,20 +206,12 @@ class ServingFrontend:
                 # so a long-running server's dispatch table stays bounded
                 del self._handles[ev.rid]
 
-    def cancel(self, handle: RequestHandle) -> bool:
+    def cancel(self, handle: RequestHandle, reason: str = "cancelled"
+               ) -> bool:
         if handle.done:
             return False
-        ok = self.engine.cancel(handle.req)
+        ok = self.engine.cancel(handle.req, reason=reason)
         # the engine emitted FinishEvent('cancelled') synchronously; deliver
         # it now so the handle is terminal the moment cancel() returns
         self._dispatch(StepEvents(self.engine.drain_events()))
         return ok
-
-    def drain(self, max_steps: int = 100_000) -> None:
-        """Poll until the engine is idle (the frontend analogue of
-        ``run_until_drained``; callers read results off the handles they
-        kept from ``submit``)."""
-        for _ in range(max_steps):
-            if self.idle:
-                break
-            self.poll()

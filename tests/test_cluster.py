@@ -1,0 +1,396 @@
+"""Cluster serving layer invariants (ISSUE 5 tentpole):
+
+  * 1-replica parity — a 1-replica ClusterFrontend is bit-identical to a
+    plain ServingFrontend at temperature 0 under EVERY router policy.
+  * N-replica exactness + residency — every request served by any replica
+    reproduces the single-engine reference tokens, and every replica's
+    ExpertResidency keeps the full slot-pool/ledger invariants after every
+    cluster poll (per-replica expert HBM stays at the fixed bound).
+  * Router behaviour — least_loaded avoids the busy replica; slo_headroom
+    rejects only when NO replica can meet the request's deadlines (terminal
+    handle with RejectEvent("router_slo"), no engine queue touched).
+  * Cancellation through the cluster frees the OWNING replica's KV slot and
+    leaves survivors bit-exact.
+  * QosAutopilot — attached to a plain ServingFrontend or a cluster, it
+    sheds mid-flight requests whose TTFT/TBT deadline is unmeetable with
+    FinishEvent(reason="slo_shed"), reclaiming resources synchronously;
+    SLO-less survivors stay bit-exact.
+"""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from test_residency import assert_residency_invariants
+
+from repro.configs.base import get_config, reduced
+from repro.models.model import build
+from repro.serving.api import (FinishEvent, GenerationRequest, RejectEvent,
+                               SamplingParams)
+from repro.serving.batching import BatchedServingEngine
+from repro.serving.cluster import (ClusterFrontend, QosAutopilot,
+                                   ReplicaPool, ROUTERS)
+from repro.serving.frontend import ServingFrontend
+
+MAX_NEW = 4
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_config("mixtral_8x7b"))
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+               for n in (12, 16, 9, 14)]
+    # reference tokens from the plain PR-4 front-end (itself pinned
+    # bit-exact to sequential serve() by tests/test_frontend.py)
+    eng = BatchedServingEngine(cfg, params, policy="duo", max_batch=2,
+                               max_seq=32, temperature=0.0,
+                               prefill_budget=3)
+    fe = ServingFrontend(eng)
+    handles = [fe.submit(GenerationRequest(
+        prompt=p, params=SamplingParams(max_new_tokens=MAX_NEW)))
+        for p in prompts]
+    fe.drain()
+    refs = [list(h.tokens) for h in handles]
+    return cfg, params, prompts, refs
+
+
+def _pool(cfg, params, n, *, max_batch=2, prefill_budget=3, policy="duo"):
+    return ReplicaPool.build(cfg, params, n, policy=policy,
+                             max_batch=max_batch, max_seq=32,
+                             temperature=0.0,
+                             prefill_budget=prefill_budget)
+
+
+def _specs(prompts, **kw):
+    return [GenerationRequest(prompt=p,
+                              params=SamplingParams(max_new_tokens=MAX_NEW),
+                              **kw) for p in prompts]
+
+
+# ---------------------------------------------------------------------------
+# parity + exactness
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("router", ROUTERS)
+def test_one_replica_cluster_bit_exact(setup, router):
+    """A 1-replica cluster is the plain front-end, bit for bit, whichever
+    router fronts it."""
+    cfg, params, prompts, refs = setup
+    fe = ClusterFrontend(_pool(cfg, params, 1), router=router)
+    handles = [fe.submit(s) for s in _specs(prompts)]
+    fe.drain()
+    assert fe.idle
+    for h, ref in zip(handles, refs):
+        assert h.replica == 0
+        assert h.finish_reason == "length"
+        assert list(h.tokens) == ref, f"{router} diverged"
+
+
+def test_multi_replica_exactness_and_residency(setup):
+    """2 replicas: per-poll residency invariants hold on EVERY replica, and
+    each request — wherever it was routed — reproduces the single-engine
+    reference tokens (row-wise exactness composes across replicas)."""
+    cfg, params, prompts, refs = setup
+    pool = _pool(cfg, params, 2)
+    fe = ClusterFrontend(pool, router="least_loaded")
+    handles = [fe.submit(s) for s in _specs(prompts)]
+    for _ in range(300):
+        fe.poll()
+        for eng in pool.engines:
+            assert_residency_invariants(eng.cache)
+        if fe.idle:
+            break
+    assert fe.idle
+    assert sum(len(e.finished) for e in pool.engines) == len(prompts)
+    assert {h.replica for h in handles} == {0, 1}, \
+        "least_loaded never spread the batch"
+    for h, ref in zip(handles, refs):
+        assert list(h.tokens) == ref, f"replica {h.replica} diverged"
+
+
+# ---------------------------------------------------------------------------
+# router behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_least_loaded_avoids_busy_replica(setup):
+    """Back-to-back submissions land on different replicas: the first loads
+    replica 0, so the second must route to replica 1 (and a third goes to
+    whichever is lighter — here the short prompt's replica)."""
+    cfg, params, prompts, refs = setup
+    pool = _pool(cfg, params, 2)
+    fe = ClusterFrontend(pool, router="least_loaded")
+    h0 = fe.submit(_specs([prompts[1]])[0])   # 16 tokens -> replica 0
+    h1 = fe.submit(_specs([prompts[2]])[0])   # 9 tokens -> replica 1
+    h2 = fe.submit(_specs([prompts[0]])[0])   # 12 -> lighter replica 1
+    assert (h0.replica, h1.replica, h2.replica) == (0, 1, 1)
+    fe.drain()
+    assert list(h0.tokens) == refs[1]
+    assert list(h1.tokens) == refs[2]
+    assert list(h2.tokens) == refs[0]
+
+
+def test_slo_headroom_rejects_only_when_no_replica_can_meet(setup):
+    """With every replica's cost model pessimistic, a deadlined request is
+    rejected AT THE ROUTER: terminal handle, RejectEvent("router_slo"), no
+    engine queue ever sees it. An SLO-less request still routes."""
+    cfg, params, prompts, refs = setup
+    pool = _pool(cfg, params, 2)
+    for eng in pool.engines:
+        eng.queue.admission.model.prefill_per_token = 10.0
+    fe = ClusterFrontend(pool, router="slo_headroom")
+    doomed = fe.submit(GenerationRequest(
+        prompt=prompts[0], params=SamplingParams(max_new_tokens=MAX_NEW),
+        ttft_slo=0.5))
+    assert doomed.done and doomed.finish_reason == "rejected"
+    assert doomed.replica is None
+    assert isinstance(doomed.events[0], RejectEvent)
+    assert doomed.events[0].reason == "router_slo"
+    assert all(len(e.queue) == 0 for e in pool.engines)
+    assert fe.n_router_rejected == 1 and len(fe.router_rejected) == 1
+    assert list(doomed) == []                    # iteration yields nothing
+    with pytest.raises(RuntimeError):
+        doomed.result()
+    assert not doomed.cancel()                   # already terminal
+    # headroom is per-request: no SLO -> +inf everywhere -> still served
+    ok = fe.submit(_specs([prompts[2]])[0])
+    assert ok.replica is not None
+    fe.drain()
+    assert list(ok.tokens) == refs[2]
+
+
+def test_slo_headroom_routes_queue_band_instead_of_rejecting(setup):
+    """When every replica's BACKLOG-inclusive prediction breaches but an
+    immediate start would fit (admission's QUEUE band), the router must
+    still route — rejection is reserved for deadlines hopeless everywhere
+    even from an immediate start."""
+    cfg, params, prompts, refs = setup
+    pool = _pool(cfg, params, 2)
+    for fe_i in pool.frontends:
+        fe_i.submit(_specs([prompts[1]])[0])      # 16 queued tokens each
+    for eng in pool.engines:
+        eng.queue.admission.model.prefill_per_token = 0.3
+        eng.queue.admission.model.decode_step = 0.01
+    fe = ClusterFrontend(pool, router="slo_headroom")
+    # prompt 9 @0.3s/tok: immediate ~2.7s fits the 5s SLO, with the 16
+    # queued tokens ahead (~7.5s) it does not — QUEUE band, not REJECT
+    spec = GenerationRequest(
+        prompt=prompts[2], params=SamplingParams(max_new_tokens=MAX_NEW),
+        ttft_slo=5.0)
+    h = fe.submit(spec)
+    assert h.replica is not None, "QUEUE-band request was router-rejected"
+    assert fe.n_router_rejected == 0
+
+
+def test_expert_affinity_prefers_warm_replica_until_overloaded(setup):
+    """The affinity ranking itself: with equal load, the replica holding
+    the likely-expert set resident wins; once that replica is overloaded
+    past the gate, affinity defers to load. Pure routing logic — no engine
+    steps run."""
+    from repro.core.tracer import ExpertsTracer
+    cfg, params, prompts, refs = setup
+    rng = np.random.default_rng(7)
+    tracer = ExpertsTracer(cfg.n_layers, cfg.n_experts, cfg.top_k)
+    for _ in range(8):
+        tracer.add_path(np.stack([
+            rng.choice(cfg.n_experts, cfg.top_k, replace=False)
+            for _ in range(cfg.n_layers)]))
+    pool = ReplicaPool.build(cfg, params, 2, policy="duo",
+                             stats=tracer.stats(), max_batch=2, max_seq=32,
+                             temperature=0.0, prefill_budget=3)
+    fe = ClusterFrontend(pool, router="expert_affinity")
+    keys = pool.likely_keys()
+    assert keys, "popularity prior should yield a non-empty likely set"
+    # warm replica 1's residency with the likely set; replica 0 stays cold
+    for key in keys:
+        pool.engines[1].cache.admit(key, pinned=False)
+    assert pool.engines[1].cache.residency_overlap(keys) == len(keys)
+    assert pool.engines[0].cache.residency_overlap(keys) == 0
+    spec = _specs([prompts[0]])[0]                       # 12-token prompt
+    assert fe.router.choose(spec, pool, 0.0) == 1, \
+        "equal load: the warm replica must win"
+    # overload the warm replica (two queued 16-token prompts exceed the
+    # overload gate: floor 0 + 2.0 * 12 = 24 < 32) -> load wins
+    for _ in range(2):
+        pool.frontends[1].submit(_specs([prompts[1]])[0])
+    assert pool.engines[1].load().total_tokens > 24
+    assert fe.router.choose(spec, pool, 0.0) == 0, \
+        "overloaded warm replica must lose to the cold idle one"
+
+
+# ---------------------------------------------------------------------------
+# cancellation + autopilot
+# ---------------------------------------------------------------------------
+
+
+def test_cancel_through_cluster_frees_owning_slot(setup):
+    cfg, params, prompts, refs = setup
+    pool = _pool(cfg, params, 2)
+    fe = ClusterFrontend(pool, router="round_robin")
+    surv0, victim, surv1 = [fe.submit(s) for s in _specs(prompts[:3])]
+    assert (surv0.replica, victim.replica, surv1.replica) == (0, 1, 0)
+    while len(victim.tokens) < 2 and not victim.done:
+        fe.poll()
+    assert victim.cancel()
+    owner = pool.engines[victim.replica]
+    assert victim.done and victim.finish_reason == "cancelled"
+    assert victim.req.slot in owner._free, "owning replica's slot not freed"
+    for eng in pool.engines:
+        assert_residency_invariants(eng.cache)
+    fe.drain()
+    assert list(surv0.tokens) == refs[0]
+    assert list(surv1.tokens) == refs[2]
+    assert victim.req.result().finish_reason == "cancelled"
+
+
+def test_autopilot_tbt_shed_single_engine(setup):
+    """The autopilot runs on a PLAIN ServingFrontend (ROADMAP SLO-aware
+    cancellation item): a decoding request whose next-token TBT deadline
+    has passed is shed with reason='slo_shed'; the SLO-less survivor is
+    bit-exact."""
+    cfg, params, prompts, refs = setup
+    eng = BatchedServingEngine(cfg, params, policy="duo", max_batch=2,
+                               max_seq=32, temperature=0.0,
+                               prefill_budget=3)
+    fe = ServingFrontend(eng)
+    ap = QosAutopilot(fe)
+    assert fe.autopilot is ap
+    survivor = fe.submit(_specs([prompts[0]])[0])
+    victim = fe.submit(GenerationRequest(
+        prompt=prompts[1], params=SamplingParams(max_new_tokens=MAX_NEW),
+        tbt_slo=0.5))
+    while len(victim.tokens) < 2 and not victim.done:
+        fe.poll()
+    # fabricated future clock: the next token's deadline is long past (the
+    # poll's own decode step may still land one more token before the scan)
+    ev = fe.poll(time.perf_counter() + 100.0)
+    n_victim_tokens = len(victim.tokens)
+    assert victim.done and victim.finish_reason == "slo_shed"
+    # the shed termination is visible on the returned event stream too
+    assert any(isinstance(e, FinishEvent) and e.reason == "slo_shed"
+               and e.rid == victim.rid for e in ev)
+    assert victim.status == "cancelled"
+    assert ap.n_shed == 1 and ap.by_reason == {"ttft": 0, "tbt": 1}
+    assert list(ap.shed) == [victim]
+    assert eng.n_slo_shed == 1
+    assert victim.req.slot in eng._free
+    assert_residency_invariants(eng.cache)
+    fe.drain()
+    assert not survivor.done or survivor.finish_reason == "length"
+    assert list(survivor.tokens) == refs[0], "shed perturbed the survivor"
+    r = victim.req.result()
+    assert r.finish_reason == "slo_shed"
+    assert len(r.tokens) == n_victim_tokens    # partial output retained
+
+
+def test_autopilot_ttft_shed_mid_prefill(setup):
+    """A prefilling request whose predicted remaining prefill overruns its
+    TTFT deadline is shed before ever emitting a token."""
+    cfg, params, prompts, refs = setup
+    pool = _pool(cfg, params, 1, prefill_budget=1)
+    fe = ClusterFrontend(pool, router="least_loaded")
+    # generous enough to be admitted (optimistic seed model), then blown
+    victim = fe.submit(GenerationRequest(
+        prompt=prompts[1], params=SamplingParams(max_new_tokens=MAX_NEW),
+        ttft_slo=5.0))
+    fe.poll()                                 # admit + first 1-token chunk
+    assert victim.status == "prefilling" and not victim.tokens
+    ap = QosAutopilot(fe)
+    shed = ap.scan(time.perf_counter() + 100.0)
+    assert shed == [victim]
+    assert victim.finish_reason == "slo_shed"
+    assert ap.by_reason == {"ttft": 1, "tbt": 0}
+    eng = pool.engines[0]
+    assert victim.req.slot in eng._free
+    assert not eng.prefilling
+    assert_residency_invariants(eng.cache)
+    assert len(victim.req.result().tokens) == 0
+
+
+def test_autopilot_sheds_queued_request(setup):
+    """A QUEUED request (no KV slot yet) whose deadline passes is shed from
+    the arrival queue; the running request is untouched."""
+    cfg, params, prompts, refs = setup
+    eng = BatchedServingEngine(cfg, params, policy="duo", max_batch=1,
+                               max_seq=32, temperature=0.0)
+    fe = ServingFrontend(eng)
+    runner = fe.submit(_specs([prompts[0]])[0])
+    fe.poll()                                 # runner takes the only slot
+    queued = fe.submit(GenerationRequest(
+        prompt=prompts[1], params=SamplingParams(max_new_tokens=MAX_NEW),
+        ttft_slo=5.0))
+    fe.poll()
+    assert queued.status == "queued"
+    ap = QosAutopilot(fe)
+    ap.scan(time.perf_counter() + 100.0)
+    assert queued.done and queued.finish_reason == "slo_shed"
+    assert len(eng.queue) == 0
+    fe.drain()
+    assert list(runner.tokens) == refs[0]
+
+
+def test_autopilot_preserves_admission_queue_band(setup):
+    """A queued request whose deadline is reachable once the backlog
+    drains (admission's QUEUE verdict: immediate-start prediction fits the
+    SLO, backlog-inclusive does not) must NOT be shed — the autopilot
+    mirrors the REJECT boundary, not the QUEUE one."""
+    cfg, params, prompts, refs = setup
+    eng = BatchedServingEngine(cfg, params, policy="duo", max_batch=1,
+                               max_seq=32, temperature=0.0,
+                               prefill_budget=1)
+    fe = ServingFrontend(eng)
+    runner = fe.submit(_specs([prompts[1]])[0])   # 16 tokens, chunk=1
+    fe.poll()                                     # big prefill backlog left
+    assert runner.req.state == "prefilling"
+    backlog = runner.req.prefill_remaining
+    assert backlog >= 10
+    queued = fe.submit(GenerationRequest(
+        prompt=prompts[2], params=SamplingParams(max_new_tokens=MAX_NEW),
+        ttft_slo=5.0))
+    # pin the cost model: own work (9 * 0.3s) fits the 5s deadline,
+    # backlog-inclusive ((backlog + 9) * 0.3s) does not
+    model = eng.queue.admission.model
+    model.prefill_per_token, model.decode_step = 0.3, 0.01
+    now = time.perf_counter()
+    assert model.predict_prefill(queued.req.prompt_len) < 5.0
+    assert model.predict_prefill(backlog + queued.req.prompt_len) > 5.0
+    ap = QosAutopilot(fe)
+    assert ap.scan(now) == []                     # QUEUE band: not shed
+    assert queued.status == "queued" and not queued.done
+    assert ap.scan(now + 100.0) == [queued]       # truly hopeless: shed
+    assert queued.finish_reason == "slo_shed"
+    fe.drain()
+    assert list(runner.tokens) == refs[1]
+
+
+# ---------------------------------------------------------------------------
+# arrival generators (benchmarks satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_arrival_generators():
+    common = pytest.importorskip("benchmarks.common")
+    rng = np.random.default_rng(0)
+    n, rate = 4000, 2.0
+    offs = {k: common.arrival_offsets(k, rate, n, np.random.default_rng(0))
+            for k in common.ARRIVALS}
+    for k, t in offs.items():
+        assert t.shape == (n,)
+        assert np.all(np.diff(t) >= 0), f"{k} offsets not monotonic"
+        # mean offered rate is honored to ~10%
+        assert n / t[-1] == pytest.approx(rate, rel=0.15), k
+    # bursty clumps: inter-arrival CV far above the Poisson process's ~1
+    def cv(t):
+        d = np.diff(np.concatenate([[0.0], t]))
+        return d.std() / d.mean()
+    assert cv(offs["bursty"]) > 2 * cv(offs["poisson"])
+    # ramp accelerates: later gaps are systematically shorter
+    gaps = np.diff(np.concatenate([[0.0], offs["ramp"]]))
+    assert gaps[: n // 4].mean() > 2 * gaps[-n // 4:].mean()
+    with pytest.raises(KeyError):
+        common.arrival_offsets("uniform", rate, n, rng)

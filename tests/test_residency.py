@@ -46,7 +46,9 @@ def assert_residency_invariants(res: ExpertResidency):
     boundary."""
     assert set(res.slot_of) == set(res.resident), \
         "slot map and ledger diverged"
-    # HBM bound: the pool IS the footprint, and it never regrew
+    # HBM bound: the pool IS the footprint, and it never regrew (the
+    # shared predicate first, then its pieces for sharper failures)
+    assert res.hbm_bound_ok
     assert res.regrow_events == 0
     assert res.pool_capacity == res.capacity
     assert res.device_bytes == res.pool_capacity * res.bytes_per_expert
