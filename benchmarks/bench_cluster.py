@@ -20,15 +20,28 @@ buys. Per (replicas, router) run it reports:
     must equal ``pool_capacity * bytes_per_expert`` with zero regrows on
     EVERY replica (the PR-3 bound, now per replica)
 
+``--disagg`` switches to the phase-disaggregation sweep instead: for each
+replica count N it compares the symmetric pool (N interchangeable
+replicas, least_loaded) against every prefill:decode split (1p:(N-1)d ...
+(N-1)p:1d) under the disagg router — same bursty workload — and
+additionally reports, per run, the handoff count, the snapshot->first-
+post-handoff-token latency (p50/p99), the host-side KV bytes moved by
+migrations, the peak host KV bytes parked by autopilot preemption, and
+the per-ROLE expert-HBM bound. Handles follow their requests across the
+prefill->decode hop, so TTFT/TPOT are end-to-end as the client sees them.
+
 ``--smoke`` (CI) runs a tiny sweep and asserts the acceptance criteria:
 a 1-replica cluster is bit-exact vs a plain ServingFrontend at temperature
 0, every replica's expert HBM stays at the fixed bound, and slo_headroom
 or expert_affinity beats round_robin on p99 TTFT or SLO attainment at 2
-replicas under bursty arrivals.
+replicas under bursty arrivals. ``--smoke --disagg`` instead asserts the
+disagg acceptance criteria: a 1-prefill + 1-decode pool is bit-exact vs
+the plain frontend, every completed request took exactly one handoff, and
+the per-role HBM bound holds with zero regrows.
 
   PYTHONPATH=src python -m benchmarks.bench_cluster \
       --replicas 1,2 --routers round_robin,slo_headroom \
-      --arrival bursty --requests 12 [--autopilot] [--smoke]
+      --arrival bursty --requests 12 [--autopilot] [--disagg] [--smoke]
 """
 import argparse
 import json
@@ -44,7 +57,8 @@ from benchmarks.common import ARRIVALS, arrival_offsets  # noqa: E402
 
 from repro.configs.base import get_config, reduced  # noqa: E402
 from repro.core.qos import percentile_report  # noqa: E402
-from repro.serving.api import GenerationRequest, SamplingParams  # noqa: E402
+from repro.serving.api import (GenerationRequest,  # noqa: E402
+                               SamplingParams, TokenEvent)
 from repro.serving.batching import (BatchedServingEngine,  # noqa: E402
                                     parse_prefill_budget)
 from repro.serving.cluster import (ClusterFrontend, QosAutopilot,  # noqa: E402
@@ -68,15 +82,26 @@ def warm_pool(pool: ReplicaPool, prompts) -> None:
     """Compile each replica's kernels outside the measurement window: one
     long + one short prompt per replica (both final-chunk shapes, decode
     batch sizes 1-2) — and seed every replica's EWMA LatencyModel with real
-    costs so slo_headroom predictions are honest from the first request."""
+    costs so slo_headroom predictions are honest from the first request.
+    On a role='prefill' replica a direct submission parks in `held` forever
+    (no decode replica is wired to a raw frontend), so warm-up there polls
+    until both requests are held and cancels them — prefill shapes are
+    exactly what that role executes in steady state."""
     longest = max(prompts, key=len)
     shortest = min(prompts, key=len)
-    for fe in pool.frontends:
-        fe.submit(GenerationRequest(prompt=longest,
-                                    params=SamplingParams(max_new_tokens=1)))
-        fe.submit(GenerationRequest(prompt=shortest,
-                                    params=SamplingParams(max_new_tokens=1)))
-        fe.drain()
+    for i, fe in enumerate(pool.frontends):
+        hs = [fe.submit(GenerationRequest(
+                  prompt=p, params=SamplingParams(max_new_tokens=1)))
+              for p in (longest, shortest)]
+        if pool.roles[i] == "prefill":
+            for _ in range(1000):
+                if all(h.req.state == "held" or h.done for h in hs):
+                    break
+                fe.poll()
+            for h in hs:
+                h.cancel()
+        else:
+            fe.drain()
 
 
 def hbm_report(pool: ReplicaPool) -> list:
@@ -96,21 +121,24 @@ def hbm_report(pool: ReplicaPool) -> list:
 def run_cluster(cfg, params, prompts, *, n_replicas: int, router: str,
                 rate: float, arrival: str, max_new: int, max_batch: int,
                 policy: str, prefill_budget, ttft_slo, tbt_slo,
-                autopilot: bool, seed: int = 0, warm: bool = True) -> dict:
+                autopilot: bool, seed: int = 0, warm: bool = True,
+                overrides=None, preempt: bool = False) -> dict:
     pool = ReplicaPool.build(
         cfg, params, n_replicas, policy=policy, max_batch=max_batch,
         max_seq=max(len(p) for p in prompts) + max_new + 2,
-        prefill_budget=prefill_budget, tbt_slo=tbt_slo, temperature=0.0)
+        prefill_budget=prefill_budget, tbt_slo=tbt_slo, temperature=0.0,
+        overrides=overrides)
     if warm:
         warm_pool(pool, prompts)
     fe = ClusterFrontend(pool, router=router)
-    ap = QosAutopilot(fe) if autopilot else None
+    ap = QosAutopilot(fe, preempt=preempt) if autopilot else None
 
     rng = np.random.default_rng(seed)
     t0 = time.perf_counter()
     arrivals = t0 + arrival_offsets(arrival, rate, len(prompts), rng)
     pending = list(zip(arrivals, prompts))
     handles = []
+    paused_kv_peak = 0
     while pending or not fe.idle:
         now = time.perf_counter()
         while pending and pending[0][0] <= now:
@@ -119,6 +147,8 @@ def run_cluster(cfg, params, prompts, *, n_replicas: int, router: str,
                 prompt=p, params=SamplingParams(max_new_tokens=max_new),
                 ttft_slo=ttft_slo, tbt_slo=tbt_slo, arrival=arr)))
         ev = fe.poll(now)
+        if ap is not None:
+            paused_kv_peak = max(paused_kv_peak, ap.paused_kv_bytes)
         if not ev.did_work and pending:
             time.sleep(max(pending[0][0] - time.perf_counter(), 0.0))
     wall = time.perf_counter() - t0
@@ -133,8 +163,19 @@ def run_cluster(cfg, params, prompts, *, n_replicas: int, router: str,
     n_router_rej = fe.n_router_rejected
     n_shed = ap.n_shed if ap else 0
     offered = len(prompts)
+    # snapshot -> first post-handoff token (the client-visible cost of the
+    # prefill->decode hop; the first-ever token lands BEFORE the handoff)
+    handoff_lat = []
+    for h in done:
+        if h.handoffs:
+            t_s = h.handoffs[0]["t_snapshot"]
+            after = [ev.t for ev in h.events
+                     if isinstance(ev, TokenEvent) and ev.t >= t_s]
+            if after:
+                handoff_lat.append(min(after) - t_s)
     rec = {
         "replicas": n_replicas,
+        "roles": list(pool.roles),
         "router": router,
         "arrival": arrival,
         "rate_req_s": rate,
@@ -150,6 +191,16 @@ def run_cluster(cfg, params, prompts, *, n_replicas: int, router: str,
         "balance": [sum(1 for h in handles if h.replica == i)
                     for i in range(n_replicas)],
         "per_replica_hbm": hbm_report(pool),
+        # snapshot-primitive traffic + host-side memory accounting: KV bytes
+        # in flight during migrations and parked by autopilot preemption
+        # live on the HOST, outside every replica's device bound above
+        "handoffs": int(pool.n_handoffs),
+        "migrated": int(pool.n_migrated),
+        "handoff_kv_bytes": int(pool.handoff_bytes),
+        "handoff_latency": (percentile_report(handoff_lat)
+                            if handoff_lat else None),
+        "preempted": int(ap.n_preempted) if ap else 0,
+        "paused_kv_bytes_peak": int(paused_kv_peak),
         "wall_s": wall,
     }
     if ttft_slo is not None:
@@ -192,6 +243,106 @@ def parity_check(cfg, params, prompts, *, max_new: int, max_batch: int,
               f"({len(prompts)} requests)")
 
 
+def disagg_parity_check(cfg, params, prompts, *, max_new: int,
+                        max_batch: int, policy: str, prefill_budget) -> None:
+    """1-prefill + 1-decode pool == plain ServingFrontend, bit-exact at
+    temp 0 — the KV snapshot handed across the hop must reproduce the
+    uninterrupted computation exactly. Also asserts every request actually
+    took the hop and both ROLES kept their expert-HBM bound."""
+    max_seq = max(len(p) for p in prompts) + max_new + 2
+    base = ServingFrontend(BatchedServingEngine(
+        cfg, params, policy=policy, max_batch=max_batch, max_seq=max_seq,
+        prefill_budget=prefill_budget, temperature=0.0))
+    ref = [base.submit(GenerationRequest(
+        prompt=p, params=SamplingParams(max_new_tokens=max_new)))
+        for p in prompts]
+    base.drain()
+    pool = ReplicaPool.build(
+        cfg, params, policy=policy, max_batch=max_batch, max_seq=max_seq,
+        prefill_budget=prefill_budget, temperature=0.0,
+        overrides=[{"role": "prefill"}, {"role": "decode"}])
+    fe = ClusterFrontend(pool, router="disagg")
+    got = [fe.submit(GenerationRequest(
+        prompt=p, params=SamplingParams(max_new_tokens=max_new)))
+        for p in prompts]
+    fe.drain()
+    for r, g in zip(ref, got):
+        assert list(r.tokens) == list(g.tokens), \
+            "disagg 1p+1d cluster diverged from plain frontend"
+        assert len(g.handoffs) == 1 and g.replica == 1, \
+            "request did not take the prefill->decode hop"
+    assert pool.n_handoffs == len(prompts)
+    for h in hbm_report(pool):
+        assert h["ok"], f"per-role expert-HBM bound violated: {h}"
+    print(f"  disagg parity OK: 1p+1d == ServingFrontend "
+          f"({len(prompts)} requests, {pool.n_handoffs} handoffs, "
+          f"{pool.handoff_bytes} host KV bytes moved)")
+
+
+def run_disagg_sweep(cfg, params, prompts, args, budget) -> None:
+    """--disagg mode: per replica count N, symmetric pool (least_loaded)
+    vs every prefill:decode split under the disagg router; asserts the
+    smoke acceptance criteria when --smoke is also set."""
+    print("disagg parity check:")
+    disagg_parity_check(cfg, params, prompts[:4], max_new=args.max_new,
+                        max_batch=args.max_batch, policy=args.policy,
+                        prefill_budget=budget)
+
+    print(f"\n{'repl':>4s} {'split':>8s} {'done':>4s} "
+          f"{'ttft_p99':>9s} {'tpot_p99':>9s} {'attain':>6s} "
+          f"{'hoffs':>5s} {'hoff_p99':>9s} {'hoff_MB':>8s} "
+          f"{'paused_KB':>9s} {'hbm':>4s}")
+    records = []
+    for n_rep in [int(r) for r in args.replicas.split(",")]:
+        if n_rep < 2:
+            print(f"{n_rep:4d}    (skip: disagg needs >= 2 replicas)")
+            continue
+        runs = [("sym", "least_loaded", None)]
+        for p in range(1, n_rep):
+            runs.append((f"{p}p:{n_rep - p}d", "disagg",
+                         [{"role": "prefill"}] * p
+                         + [{"role": "decode"}] * (n_rep - p)))
+        for split, router, overrides in runs:
+            rec = run_cluster(
+                cfg, params, prompts, n_replicas=n_rep, router=router,
+                rate=args.rate, arrival=args.arrival, max_new=args.max_new,
+                max_batch=args.max_batch, policy=args.policy,
+                prefill_budget=budget, ttft_slo=args.ttft_slo,
+                tbt_slo=args.tbt_slo, overrides=overrides,
+                autopilot=args.autopilot or args.smoke,
+                preempt=args.autopilot)
+            rec["split"] = split
+            records.append(rec)
+            hbm_ok = all(h["ok"] for h in rec["per_replica_hbm"])
+            hl = rec["handoff_latency"]
+            print(f"{n_rep:4d} {split:>8s} {rec['completed']:4d} "
+                  f"{rec['ttft']['p99']:8.3f}s {rec['tpot']['p99']:8.3f}s "
+                  f"{rec.get('slo_attainment', float('nan')):6.2f} "
+                  f"{rec['handoffs']:5d} "
+                  f"{(hl['p99'] if hl else float('nan')):8.3f}s "
+                  f"{rec['handoff_kv_bytes'] / 2**20:8.2f} "
+                  f"{rec['paused_kv_bytes_peak'] / 2**10:9.1f} "
+                  f"{'ok' if hbm_ok else 'VIOLATED':>4s}")
+            assert hbm_ok, ("per-role expert-HBM bound violated: "
+                            f"{rec['per_replica_hbm']}")
+            if router == "disagg":
+                assert rec["handoffs"] >= rec["completed"], \
+                    "a completed request never took the prefill->decode hop"
+
+    if args.smoke:
+        print("\nbench_cluster --disagg smoke OK: 1p+1d bit-exact vs plain "
+              "frontend; every completed request took the handoff; "
+              "per-role expert HBM bounded")
+
+    out = args.out
+    if out is None:
+        os.makedirs(RESULTS, exist_ok=True)
+        out = os.path.join(RESULTS, "cluster_disagg.json")
+    with open(out, "w") as f:
+        json.dump(records, f, indent=1)
+    print(f"wrote {out}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mixtral-8x7b")
@@ -211,6 +362,9 @@ def main():
     ap.add_argument("--tbt-slo", type=float, default=None)
     ap.add_argument("--autopilot", action="store_true",
                     help="attach the QosAutopilot (mid-flight SLO shedding)")
+    ap.add_argument("--disagg", action="store_true",
+                    help="prefill:decode split sweep (vs symmetric pool) "
+                         "instead of the router sweep")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI sweep asserting 1-replica parity, the "
                          "per-replica expert-HBM bound, and an SLO/"
@@ -229,6 +383,10 @@ def main():
                            cfg.vocab)
     budget = parse_prefill_budget(args.prefill_budget)
     routers = args.routers.split(",")
+
+    if args.disagg:
+        run_disagg_sweep(cfg, params, prompts, args, budget)
+        return
 
     print("1-replica parity check:")
     parity_check(cfg, params, prompts[:4], max_new=args.max_new,

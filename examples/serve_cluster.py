@@ -15,6 +15,13 @@ The cluster layer in three moves (serving/cluster.py):
                       (FinishEvent reason="slo_shed"), freeing their
                       replica's KV slot and expert budget for survivors.
 
+Plus the two elasticity moves built on the KV snapshot primitive
+(BatchedServingEngine.snapshot/restore): a phase-DISAGGREGATED pool
+(role="prefill" / role="decode" replicas, router="disagg" — finished
+prefills hand their KV to a decode replica, handle follows, bit-exact)
+and mid-flight replica DRAINING (pool.drain(i) migrates its in-flight
+requests to the survivors, also bit-exact).
+
   PYTHONPATH=src python examples/serve_cluster.py --replicas 2 --requests 6
   PYTHONPATH=src python examples/serve_cluster.py --smoke   # CI
 """
@@ -130,6 +137,48 @@ def main():
     assert victim.finish_reason == "slo_shed"
     assert victim.req.slot in owner._free
     fe.drain()
+
+    # [disagg] phase-disaggregated pool: 1 prefill + 1 decode replica.
+    # The disagg router lands every new request on the prefill replica;
+    # when its prefill finishes, the engine HOLDS it, the cluster snapshots
+    # its KV prefix host-side and restores it on the decode replica — the
+    # handle follows the request across the hop and the tokens match the
+    # plain front-end bit for bit.
+    dpool = ReplicaPool.build(
+        cfg, params,
+        overrides=[{"role": "prefill"}, {"role": "decode"}], **kw)
+    dfe = ClusterFrontend(dpool, router="disagg")
+    dhs = [dfe.submit(GenerationRequest(
+        prompt=p, params=SamplingParams(max_new_tokens=args.max_new)))
+        for p in prompts]
+    dfe.drain()
+    for r, g in zip(ref, dhs):
+        assert list(r.tokens) == list(g.tokens), "disagg diverged"
+        assert g.handoffs and g.replica == 1
+    print(f"disagg 1p+1d: {dpool.n_handoffs} prefill->decode handoffs "
+          f"({dpool.handoff_bytes / 2**10:.1f} KiB host KV moved), "
+          f"tokens bit-exact vs plain front-end")
+
+    # [drain] elasticity: take a replica out of service MID-FLIGHT — its
+    # queued/prefilling/running requests migrate to the survivors via the
+    # same snapshot primitive, finish bit-exactly, and new work routes
+    # around the draining replica until undrain().
+    pool2 = ReplicaPool.build(cfg, params, 2, **kw)
+    fe2 = ClusterFrontend(pool2, router="round_robin")
+    hs2 = [fe2.submit(GenerationRequest(
+        prompt=p, params=SamplingParams(max_new_tokens=args.max_new)))
+        for p in prompts]
+    fe2.poll()
+    fe2.poll()
+    pool2.drain(0)
+    fe2.drain()
+    assert pool2.engines[0].idle and 0 not in pool2.routable()
+    for r, g in zip(ref, hs2):
+        assert list(r.tokens) == list(g.tokens), "drain migration diverged"
+    print(f"drain: replica 0 emptied mid-flight ({pool2.n_migrated} "
+          f"requests migrated), all streams bit-exact; routable="
+          f"{pool2.routable()}")
+    pool2.undrain(0)
 
     if args.smoke:
         print("serve_cluster smoke OK")

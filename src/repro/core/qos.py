@@ -210,6 +210,20 @@ class TBTLedger:
         while len(self._closed) > self._closed_window:
             self.by_rid.pop(self._closed.popleft(), None)
 
+    def reopen(self, rid: int, gaps: Sequence[float] = ()) -> None:
+        """Re-seed a restored request's gap history after a host-side pause
+        (serving snapshot/restore: preemption, prefill->decode handoff,
+        drain migration). Deliberately sets NO baseline: the first token
+        after resume records no gap, so wall time spent paused or in
+        transit is never charged as an inter-token gap — without this every
+        preempted request would spuriously blow its TBT SLO. The carried
+        per-request gaps seed `by_rid` (so `attainment` stays correct) but
+        are NOT re-fed to the aggregate window/sketches: they were already
+        observed once, on the ledger that recorded them."""
+        if gaps:
+            self.by_rid[rid] = collections.deque(
+                gaps, maxlen=self._per_rid_window)
+
     def max_gap(self) -> float:
         """Lifetime maximum gap (scalar — survives window eviction)."""
         return self._max
@@ -246,8 +260,17 @@ class ReplicaLoad:
     prefill_backlog: int    # prompt tokens left for admitted 'prefilling'
     running: int            # requests in batched decode
     decode_backlog: int     # decode tokens outstanding (incl. prefilling
-    #                         requests' full decode budget — committed work)
+    #                         requests' full decode budget — committed work,
+    #                         EXCEPT on role='prefill' replicas, whose
+    #                         requests decode elsewhere after KV handoff)
     free_slots: int         # KV slots available for new admissions
+    held: int = 0           # finished-prefill requests awaiting KV handoff
+    #                         (role='prefill' replicas; they occupy a slot
+    #                         but contribute no decode backlog here).
+    #                         Host-PAUSED requests appear in NO field at all:
+    #                         a snapshot released every engine resource, so
+    #                         load — and AdmissionController.headroom, which
+    #                         consumes these numbers — excludes them.
 
     @property
     def total_tokens(self) -> int:

@@ -8,12 +8,23 @@ The public serving surface, top down:
     behind a pluggable ``Router`` — ``round_robin`` / ``least_loaded`` /
     ``slo_headroom`` (max SLO margin, reject only if NO replica can meet
     the deadlines) / ``expert_affinity`` (overlap between the request's
-    likely-expert set and each replica's live residency).
+    likely-expert set and each replica's live residency) / ``disagg``
+    (prefill/decode phase disaggregation: per-replica role overrides, new
+    requests to prefill replicas, finished-prefill KV snapshots handed to
+    the decode replica with the best per-request expert affinity).
     ``ClusterFrontend`` keeps the exact single-engine surface below, and
     ``QosAutopilot`` (attachable to either front-end) sheds requests whose
     TTFT/TBT deadline is already unmeetable mid-flight
     (``FinishEvent(reason="slo_shed")``, resources reclaimed
-    synchronously).
+    synchronously) and, with ``preempt=True``, pauses/resumes
+    low-priority requests host-side instead of killing them.
+    ``ReplicaPool.drain(i)`` migrates a replica's in-flight requests to
+    the survivors (elasticity), all via the one snapshot primitive below.
+  * ``RequestSnapshot`` (``api``) + ``BatchedServingEngine.snapshot`` /
+    ``restore`` — the request-level pause/handoff/migration primitive: KV
+    prefix gathered host-side, engine resources released like a cancel,
+    resume is bit-exact on any engine that fits the request (frontends'
+    ``pause``/``resume`` rebind the live ``RequestHandle`` across hops).
   * ``api`` — the typed vocabulary: ``SamplingParams`` (frozen sampling
     spec: temperature, max_new_tokens, stop_token_ids, seed),
     ``GenerationRequest`` (prompt + params + ttft_slo/tbt_slo QoS targets +
@@ -46,10 +57,11 @@ tests/test_cluster.py).
 """
 from repro.serving.api import (Event, FinishEvent,  # noqa: F401
                                GenerationRequest, RejectEvent,
-                               SamplingParams, StepEvents, TokenEvent)
-from repro.serving.cluster import (ClusterFrontend, QosAutopilot,  # noqa: F401
-                                   ReplicaPool, Router, ROUTERS,
-                                   make_router)
+                               RequestSnapshot, SamplingParams, StepEvents,
+                               TokenEvent)
+from repro.serving.cluster import (ClusterFrontend, DisaggRouter,  # noqa: F401
+                                   QosAutopilot, ReplicaPool, Router,
+                                   ROUTERS, make_router)
 from repro.serving.engine import (EngineCore, MoEServingEngine,  # noqa: F401
                                   RequestResult, collect_traces)
 from repro.serving.frontend import (RequestHandle,  # noqa: F401

@@ -23,7 +23,7 @@ anywhere (benchmarks, examples, tests) without pulling in jax state.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, Optional, Tuple, Union
+from typing import Iterable, List, Optional, Tuple, Union
 
 import numpy as np
 
@@ -92,6 +92,68 @@ def as_request_spec(spec, **kw) -> GenerationRequest:
         return spec
     return GenerationRequest(
         prompt=np.asarray(spec, np.int32).reshape(-1), **kw)
+
+
+# ---------------------------------------------------------------------------
+# request snapshot (pause / handoff / migration primitive)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RequestSnapshot:
+    """A paused request, portable across engines
+    (``BatchedServingEngine.snapshot(rid)`` / ``restore(snapshot)``).
+
+    Captures everything needed to resume the request bit-exactly on ANY
+    engine whose per-slot KV capacity fits it: the immutable spec, the
+    tokens generated so far, the per-layer KV prefix (gathered host-side —
+    dense, row p = position p, so ring positions rebuild as ``arange``),
+    mid-prefill progress, the per-request decode traces/counters, the
+    sampling rng state (carried, never re-derived — a re-derived stream
+    would break bit-exactness for temperature > 0), and the TBT-ledger gap
+    history (re-seeded via ``TBTLedger.reopen`` so paused wall time is
+    never charged as an inter-token gap).
+
+    state is the LOGICAL resume point, not the verbatim source state:
+    ``queued`` (never started — re-enqueues without a KV slot),
+    ``prefilling`` (mid-prefill, ``prefill_pos`` prompt tokens of KV
+    captured), or ``running`` (prefill complete — a ``held`` request on a
+    prefill-role replica snapshots as ``running`` and a decode-capable
+    engine resumes it straight into its batch).
+
+    Consumers: QosAutopilot preemption (pause low-priority, resume on
+    headroom), disaggregated prefill->decode handoff, and replica draining
+    (serving/cluster.py). While a snapshot exists its KV lives HOST-side —
+    ``kv_bytes`` is what memory accounting should charge there.
+    """
+    spec: GenerationRequest
+    state: str                       # queued | prefilling | running
+    tokens: List[int]
+    kv_k: List[np.ndarray]           # per layer [P, n_kv_heads, hd]
+    kv_v: List[np.ndarray]
+    prefill_pos: int
+    active_sets: Optional[List[List[int]]]  # accumulating expert sets
+    prefill_active: List[List[int]]
+    trace: List[np.ndarray]
+    pred: List[np.ndarray]
+    hits: int
+    misses: int
+    t_start: float
+    t_first: float
+    tbt_gaps: List[float]
+    rng_state: Optional[dict]
+    source_rid: int
+    t_snapshot: float
+
+    @property
+    def kv_bytes(self) -> int:
+        """Host bytes the captured KV prefix occupies while paused."""
+        return sum(a.nbytes for a in self.kv_k) + \
+            sum(a.nbytes for a in self.kv_v)
+
+    @property
+    def n_tokens(self) -> int:
+        return len(self.tokens)
 
 
 # ---------------------------------------------------------------------------

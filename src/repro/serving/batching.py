@@ -81,7 +81,8 @@ from repro.core.qos import (Admission, AdmissionController, ReplicaLoad,
 from repro.core.scheduler import DuoServeScheduler
 from repro.models.layers import PDT
 from repro.serving.api import (FinishEvent, GenerationRequest, RejectEvent,
-                               SamplingParams, StepEvents, TokenEvent)
+                               RequestSnapshot, SamplingParams, StepEvents,
+                               TokenEvent)
 from repro.serving.engine import EngineCore, RequestResult
 
 
@@ -97,7 +98,11 @@ class Request:
     tbt_slo: Optional[float] = None
     priority: int = 0
     # runtime state ---------------------------------------------------------
-    state: str = "queued"    # queued|prefilling|running|done|rejected|cancelled
+    # queued|prefilling|running|held|done|rejected|cancelled|paused:
+    # 'held' = prefill complete on a role='prefill' replica, awaiting KV
+    # handoff; 'paused' = snapshot taken, the request lives HOST-side in a
+    # RequestSnapshot (this engine holds nothing for it any more)
+    state: str = "queued"
     finish_reason: Optional[str] = None  # length|stop_token|cancelled|slo_shed
     slot: int = -1
     prefill_pos: int = 0             # prompt tokens already prefilled
@@ -285,6 +290,7 @@ class BatchedServingEngine(EngineCore):
                  finished_window: Optional[int] = None,
                  tbt_window: Optional[int] = 8192,
                  queue: Optional[RequestQueue] = None,
+                 role: str = "both",
                  stats=None, predictor=None, cache_capacity=None,
                  temperature: float = 0.0, sample_seed: int = 0):
         super().__init__(cfg, params, policy, stats=stats,
@@ -314,8 +320,18 @@ class BatchedServingEngine(EngineCore):
         self._V = [jnp.zeros_like(self._K[l]) for l in range(self.L)]
         self._slot_pos = np.full((max_batch, max_seq), -1, np.int32)
         self._free: List[int] = list(range(max_batch))[::-1]
+        # disaggregated-cluster role (serving/cluster.py): "both" serves
+        # the full lifecycle; "prefill" HOLDS requests once their prefill
+        # completes (state 'held', first token emitted, excluded from the
+        # decode batch) until their KV snapshot is handed to a decode
+        # replica; "decode" is a handoff TARGET — it can run the full
+        # lifecycle if submitted to directly (warm-up), routers just never
+        # send it fresh work.
+        assert role in ("both", "prefill", "decode"), f"bad role {role!r}"
+        self.role = role
         self.prefilling: List[Request] = []   # state='prefilling'
         self.running: List[Request] = []
+        self.held: List[Request] = []         # state='held' (role=prefill)
         self.finished: Deque[Request] = collections.deque(
             maxlen=finished_window)
         self.cancelled: Deque[Request] = collections.deque(
@@ -332,10 +348,13 @@ class BatchedServingEngine(EngineCore):
 
     @property
     def idle(self) -> bool:
-        """No queued, prefilling, or running requests — nothing a step()
-        could advance (event consumers use this, not event emptiness:
-        prefill-chunk work emits no token)."""
-        return not (self.running or self.prefilling or len(self.queue))
+        """No queued, prefilling, running, or held requests — nothing a
+        step() could advance (event consumers use this, not event
+        emptiness: prefill-chunk work emits no token). Held requests count:
+        they are waiting on an EXTERNAL actor (the cluster handoff loop),
+        so a driver must keep polling until they move."""
+        return not (self.running or self.prefilling or self.held
+                    or len(self.queue))
 
     def _current_budget(self) -> Optional[int]:
         """Resolve this step's prefill token budget. Auto mode consults the
@@ -427,15 +446,17 @@ class BatchedServingEngine(EngineCore):
         serving/cluster.py). Reclamation is identical for both."""
         if req.state in ("done", "rejected", "cancelled"):
             return False
+        if req.state == "paused":
+            # the engine holds NOTHING for a paused request — its life is
+            # in a host-side RequestSnapshot; the snapshot's owner (the
+            # frontend/autopilot) terminates it
+            return False
         if req.state == "queued":
             if not self.queue.remove(req):
                 return False
-        elif req.state == "prefilling":
-            self.prefilling.remove(req)
-            self._release_expert_contributions(req)
-            self._release_slot(req)
-        elif req.state == "running":
-            self.running.remove(req)
+        elif req.state in ("prefilling", "running", "held"):
+            {"prefilling": self.prefilling, "running": self.running,
+             "held": self.held}[req.state].remove(req)
             self._release_expert_contributions(req)
             self._release_slot(req)
         else:  # pragma: no cover - unknown state is a bug
@@ -463,11 +484,17 @@ class BatchedServingEngine(EngineCore):
     def load(self) -> ReplicaLoad:
         """Snapshot this engine's outstanding work as a ReplicaLoad
         (core/qos.py): what the routers rank replicas by. Decode backlog
-        counts every token the engine is still committed to produce —
+        counts every token THIS engine is still committed to produce —
         running requests' remaining budget plus prefilling requests' full
-        budget (their decode work hasn't started)."""
+        budget (their decode work hasn't started). On a role='prefill'
+        replica the decode work happens elsewhere after handoff, so held
+        requests and prefilling requests' decode budgets are excluded.
+        Host-PAUSED requests released every resource here and appear in no
+        field — load (and every headroom computed from it) never charges
+        them."""
         dec = sum(r.max_new + 1 - len(r.tokens) for r in self.running)
-        dec += sum(r.max_new + 1 for r in self.prefilling)
+        if self.role != "prefill":
+            dec += sum(r.max_new + 1 for r in self.prefilling)
         return ReplicaLoad(
             queue_depth=len(self.queue),
             queued_tokens=self.queue.queued_tokens(),
@@ -475,7 +502,8 @@ class BatchedServingEngine(EngineCore):
                                 for r in self.prefilling),
             running=len(self.running),
             decode_backlog=dec,
-            free_slots=len(self._free))
+            free_slots=len(self._free),
+            held=len(self.held))
 
     def _release_slot(self, req: Request) -> None:
         self._slot_pos[req.slot, :] = -1
@@ -504,12 +532,181 @@ class BatchedServingEngine(EngineCore):
             return keys
 
         mine = touched(req)
-        for other in self.prefilling + self.running:
+        for other in self.prefilling + self.running + self.held:
             if other is not req:
                 mine -= touched(other)
         for key in mine:
             if self.cache.contains(key) and not self.cache.resident[key]:
                 self.cache.drop(key)
+
+    # -- snapshot / restore (pause, handoff, migration primitive) -----------
+    def find_request(self, rid: int) -> Optional[Request]:
+        """The live (queued/prefilling/running/held) request with id `rid`,
+        or None — terminal and paused requests are not live here."""
+        for r in (list(self.queue.pending) + self.prefilling
+                  + self.running + self.held):
+            if r.rid == rid:
+                return r
+        return None
+
+    def snapshot(self, req: Union[Request, int]) -> RequestSnapshot:
+        """Pause a live request and capture it as a host-side, engine-
+        portable ``RequestSnapshot`` (serving/api.py).
+
+        The KV prefix is gathered host-side from the request's slot (or,
+        mid-prefill, from its chunk-carry buffers) as a DENSE array — the
+        ring never wraps (``need <= W`` is asserted at submission), so ring
+        slot == absolute position and row p is position p. Resource
+        reclamation is exactly ``cancel()``'s: the KV slot returns to the
+        free pool, expert-residency contributions no other in-flight
+        request touched are dropped, and the TBT-ledger entry closes (so
+        paused wall time is never charged as an inter-token gap — see
+        ``TBTLedger.reopen``). Unlike cancel, NO FinishEvent is emitted:
+        the request is not terminal, it is host-side; its state becomes
+        'paused' and this engine never references it again. A ``held``
+        request snapshots with state='running' — prefill is complete, any
+        decode-capable engine resumes it straight into its batch."""
+        if isinstance(req, int):
+            found = self.find_request(req)
+            assert found is not None, f"no live request with rid {req}"
+            req = found
+        assert req.state in ("queued", "prefilling", "running", "held"), \
+            f"snapshot from state {req.state!r}"
+        assert not req.done, "snapshot of a finished request"
+        spec = GenerationRequest(
+            prompt=req.prompt, params=req.params, ttft_slo=req.ttft_slo,
+            tbt_slo=req.tbt_slo, priority=req.priority, arrival=req.arrival)
+        kv_k: List[np.ndarray] = []
+        kv_v: List[np.ndarray] = []
+        if req.state == "queued":
+            ok = self.queue.remove(req)
+            assert ok, "queued request not in its queue"
+            state = "queued"
+        elif req.state == "prefilling":
+            P = req.prefill_pos
+            for l in range(self.L):
+                kv_k.append(np.asarray(req.pf_k[l][0, :P]))
+                kv_v.append(np.asarray(req.pf_v[l][0, :P]))
+            self.prefilling.remove(req)
+            self._release_expert_contributions(req)
+            self._release_slot(req)
+            state = "prefilling"
+        else:
+            # running/held: positions 0..pos-1 are written (the latest
+            # token's KV lands when IT is decoded, not when sampled)
+            P = req.pos
+            for l in range(self.L):
+                kv_k.append(np.asarray(self._K[l][req.slot, :P]))
+                kv_v.append(np.asarray(self._V[l][req.slot, :P]))
+            (self.running if req.state == "running"
+             else self.held).remove(req)
+            self._release_expert_contributions(req)
+            self._release_slot(req)
+            state = "running"
+        snap = RequestSnapshot(
+            spec=spec, state=state, tokens=list(req.tokens),
+            kv_k=kv_k, kv_v=kv_v, prefill_pos=req.prefill_pos,
+            active_sets=([sorted(int(e) for e in s)
+                          for s in req.active_sets]
+                         if req.active_sets is not None else None),
+            prefill_active=[list(map(int, a)) for a in req.prefill_active],
+            trace=list(req.trace), pred=list(req.pred),
+            hits=req.hits, misses=req.misses,
+            t_start=req.t_start, t_first=req.t_first,
+            tbt_gaps=list(self.tbt.by_rid.get(req.rid, ())),
+            rng_state=(req.rng.bit_generator.state
+                       if req.rng is not None else None),
+            source_rid=req.rid, t_snapshot=time.perf_counter())
+        self.tbt.close(req.rid)
+        req.state = "paused"
+        req.slot = -1
+        req.pf_k = req.pf_v = req.pf_sp = None
+        req.active_sets = None
+        return snap
+
+    def can_restore(self, snap: RequestSnapshot) -> bool:
+        """Whether ``restore(snap)`` would succeed right now: the request
+        fits a KV slot (always true for a still-queued snapshot) and, mid-
+        prefill, this engine can run chunked prefill."""
+        prompt = np.asarray(snap.spec.prompt).reshape(-1)
+        need = int(prompt.shape[0]) + snap.spec.params.max_new_tokens + 1
+        if need > self.W:
+            return False
+        if snap.state == "queued":
+            return True
+        return bool(self._free) and \
+            (snap.state != "prefilling" or self.chunked)
+
+    def restore(self, snap: RequestSnapshot) -> Request:
+        """Resume a snapshot on THIS engine as a fresh request (new rid —
+        rids stay engine-local and monotonic; cluster consumers track the
+        HANDLE, which the frontend rebinds). The carried rng state, token
+        list, and KV prefix make the continuation bit-exact: the dense KV
+        rows scatter into a free slot at positions ``0..P-1`` and every
+        later ring position stays -1, which the attention mask weights to
+        exactly zero — stale slot contents cannot leak in. A 'running'
+        snapshot joins the decode batch (or this replica's held list if it
+        is itself role='prefill'); a 'prefilling' one resumes chunking from
+        ``prefill_pos``; a 'queued' one simply re-enqueues. The TBT ledger
+        reopens WITHOUT a baseline, so the pause is never charged as a
+        gap."""
+        spec = snap.spec
+        req = Request(rid=self._next_rid,
+                      prompt=np.asarray(spec.prompt, np.int32).reshape(-1),
+                      params=spec.params, arrival=spec.arrival,
+                      ttft_slo=spec.ttft_slo, tbt_slo=spec.tbt_slo,
+                      priority=spec.priority)
+        need = req.prompt_len + req.max_new + 1
+        assert need <= self.W, \
+            f"restored request needs {need} slots > W={self.W}"
+        self._next_rid += 1
+        req.rng = np.random.default_rng()
+        if snap.rng_state is not None:
+            req.rng.bit_generator.state = snap.rng_state
+        req.tokens = list(snap.tokens)
+        req.trace = list(snap.trace)
+        req.pred = list(snap.pred)
+        req.hits, req.misses = snap.hits, snap.misses
+        req.t_start, req.t_first = snap.t_start, snap.t_first
+        req.prefill_active = [list(a) for a in snap.prefill_active]
+        if snap.state == "queued":
+            req.state = "queued"
+            self.queue.submit(req)
+            return req
+        assert self._free, "no free KV slot to restore into"
+        slot = self._free.pop()
+        req.slot = slot
+        self._slot_pos[slot, :] = -1
+        if snap.state == "prefilling":
+            assert self.chunked, "mid-prefill restore needs a chunked engine"
+            P = snap.prefill_pos
+            req.state = "prefilling"
+            req.prefill_pos = P
+            req.active_sets = [set(s) for s in snap.active_sets]
+            hkv, hd = self.cfg.n_kv_heads, self.cfg.hd
+            req.pf_k = [jnp.zeros((1, self.W, hkv, hd), PDT)
+                        .at[0, :P].set(jnp.asarray(snap.kv_k[l], PDT))
+                        for l in range(self.L)]
+            req.pf_v = [jnp.zeros((1, self.W, hkv, hd), PDT)
+                        .at[0, :P].set(jnp.asarray(snap.kv_v[l], PDT))
+                        for l in range(self.L)]
+            sp = np.full((1, self.W), -1, np.int32)
+            sp[0, :P] = np.arange(P, dtype=np.int32)
+            req.pf_sp = jnp.asarray(sp)
+            self.prefilling.append(req)
+        else:
+            assert snap.state == "running", f"bad state {snap.state!r}"
+            P = req.pos
+            for l in range(self.L):
+                self._K[l] = self._K[l].at[slot, :P].set(
+                    jnp.asarray(snap.kv_k[l], PDT))
+                self._V[l] = self._V[l].at[slot, :P].set(
+                    jnp.asarray(snap.kv_v[l], PDT))
+            self._slot_pos[slot, :P] = np.arange(P, dtype=np.int32)
+            req.prefill_pos = req.prompt_len
+            self._finish_prefill(req)   # running, or held on role='prefill'
+        self.tbt.reopen(req.rid, snap.tbt_gaps)
+        return req
 
     # -- prefill phase ------------------------------------------------------
     def _admit_and_prefill(self, now: float) -> List[Request]:
@@ -561,8 +758,20 @@ class BatchedServingEngine(EngineCore):
             tok = self._sample_req(req, logits[0])
             self._emit_token(req, tok, time.perf_counter(), first=True)
             self.queue.admission.model.observe_prefill(S, req.t_first - t0)
-            self.running.append(req)
+            self._finish_prefill(req)
         return newly
+
+    def _finish_prefill(self, req: Request) -> None:
+        """Prefill done, first token emitted: a role='prefill' replica
+        HOLDS the request (state 'held', out of the decode batch) until the
+        cluster hands its KV snapshot to a decode replica; every other role
+        joins this step's decode batch."""
+        if self.role == "prefill":
+            req.state = "held"
+            self.held.append(req)
+        else:
+            req.state = "running"
+            self.running.append(req)
 
     def _run_prefill_chunk(self, req: Request, C: int) -> None:
         """Advance one 'prefilling' request by a C-token chunk.
@@ -599,9 +808,8 @@ class BatchedServingEngine(EngineCore):
             req.active_sets = None
             tok = self._sample_req(req, logits[0])
             self._emit_token(req, tok, time.perf_counter(), first=True)
-            req.state = "running"
             self.prefilling.remove(req)
-            self.running.append(req)
+            self._finish_prefill(req)
 
     def _prefill_work(self) -> int:
         """Spend up to this step's prefill budget advancing 'prefilling'
@@ -759,23 +967,26 @@ class BatchedServingEngine(EngineCore):
             self._decode_step(batch)
         did_work = bool(admitted or prefilled or batch)
         self.step_count += 1
-        # retire finished requests, free their slots
-        still = []
-        for r in self.running:
-            if r.done:
-                r.state = "done"
-                if r.finish_reason is None:
-                    r.finish_reason = "length"
-                r.t_done = time.perf_counter()
-                self._release_slot(r)
-                self.finished.append(r)
-                self.tbt.close(r.rid)
-                self._emit(FinishEvent(rid=r.rid, reason=r.finish_reason,
-                                       n_tokens=len(r.tokens), t=r.t_done))
-            else:
-                still.append(r)
-        self.running = still
+        # retire finished requests, free their slots (held requests can
+        # finish at their FIRST token — stop token or max_new_tokens=0 —
+        # without ever reaching a decode replica)
+        self.running = [r for r in self.running if not self._retire(r)]
+        self.held = [r for r in self.held if not self._retire(r)]
         return StepEvents(self.drain_events(), did_work)
+
+    def _retire(self, r: Request) -> bool:
+        if not r.done:
+            return False
+        r.state = "done"
+        if r.finish_reason is None:
+            r.finish_reason = "length"
+        r.t_done = time.perf_counter()
+        self._release_slot(r)
+        self.finished.append(r)
+        self.tbt.close(r.rid)
+        self._emit(FinishEvent(rid=r.rid, reason=r.finish_reason,
+                               n_tokens=len(r.tokens), t=r.t_done))
+        return True
 
     def run_until_drained(self, max_steps: int = 10_000) -> Deque[Request]:
         """Thin compat wrapper over the event stream: drive step() until

@@ -28,11 +28,29 @@ Routers (``make_router``):
     replica's live residency ledger (``CacheState.residency_overlap``);
     load-overloaded replicas are excluded first (production-stack's
     overload-detector-then-affinity order), ties broken by load.
+  * ``disagg``         — disaggregated prefill/decode dispatch (the paper's
+    dual-phase split at cluster scale, ROADMAP item 1): NEW requests go to
+    prefill-role replicas only; when a prefill completes, the request sits
+    ``held`` until the per-poll handoff (``ReplicaPool.handoff_held``)
+    snapshots its KV prefix and restores it into the decode replica with
+    the best per-request expert-affinity/headroom. Per-replica ``build``
+    overrides size each role differently (big dense-traffic residency
+    pools for prefill, small predictor-driven ones for decode).
+
+Every policy routes over the pool's ROUTABLE replicas: ``ReplicaPool.
+drain(i)`` removes a replica from routing and migrates its in-flight
+requests to the survivors via the same snapshot/restore primitive
+(retried each poll; ``undrain`` reverses). All of it rides on
+``BatchedServingEngine.snapshot/restore`` — a paused, handed-off, or
+migrated request resumes BIT-EXACTLY (carried rng state + dense KV prefix
++ token list), so phase placement never changes tokens.
 
 ``ClusterFrontend`` keeps the exact PR-4 serving surface — ``submit(spec)
 -> RequestHandle``, cooperative ``poll()`` (steps ALL replicas), handle
 ``.cancel()`` delegating to the owning replica — so every existing
-example/bench runs on a cluster by swapping one constructor. A request the
+example/bench runs on a cluster by swapping one constructor; across
+handoffs/migrations the SAME handle follows the request (rebound to each
+restored incarnation, hops recorded on ``handle.handoffs``). A request the
 router rejects gets a terminal handle with a ``RejectEvent("router_slo")``
 and never touches an engine queue.
 
@@ -43,6 +61,9 @@ next-token TBT deadline has already passed is shed via ``handle.cancel
 (reason="slo_shed")`` — the KV slot, residency contributions, and TBT entry
 reclaimed synchronously, surfaced as ``FinishEvent(reason="slo_shed")`` and
 counted on both the autopilot and the owning engine (``n_slo_shed``).
+With ``preempt=True`` it also gets a RECOVERABLE action: pause the
+lowest-priority in-flight request host-side when a higher-priority one is
+stuck queued, and resume it bit-exactly when headroom returns.
 Survivors are bit-unaffected (tests/test_cluster.py).
 
 Determinism: at temperature 0 a 1-replica cluster is bit-identical to a
@@ -63,8 +84,8 @@ import numpy as np
 
 from repro.core.cache import ExpertKey
 from repro.core.qos import AdmissionController, ReplicaLoad
-from repro.serving.api import (GenerationRequest, RejectEvent, StepEvents,
-                               as_request_spec)
+from repro.serving.api import (GenerationRequest, RejectEvent,
+                               RequestSnapshot, StepEvents, as_request_spec)
 from repro.serving.batching import BatchedServingEngine, Request, RequestQueue
 from repro.serving.frontend import (CooperativeDriver, RequestHandle,
                                     ServingFrontend)
@@ -112,9 +133,16 @@ class Router:
     """Routing policy: pick the replica index for a request, or None to
     reject it outright (only ``slo_headroom`` ever rejects). Stateless
     except for policy-owned cursors, so one router instance serves one
-    ClusterFrontend."""
+    ClusterFrontend. Every policy ranks over ``candidates(pool)`` —
+    by default the pool's routable (non-draining) replicas, which the
+    DisaggRouter narrows to prefill-capable ones."""
 
     name = "base"
+
+    def candidates(self, pool: "ReplicaPool") -> List[int]:
+        cands = pool.routable()
+        assert cands, "every replica is draining — nowhere to route"
+        return cands
 
     def choose(self, spec: GenerationRequest, pool: "ReplicaPool",
                now: float) -> Optional[int]:
@@ -128,7 +156,8 @@ class RoundRobinRouter(Router):
         self._cursor = 0
 
     def choose(self, spec, pool, now):
-        i = self._cursor % pool.n
+        cands = self.candidates(pool)
+        i = cands[self._cursor % len(cands)]
         self._cursor += 1
         return i
 
@@ -140,7 +169,7 @@ class LeastLoadedRouter(Router):
 
     def choose(self, spec, pool, now):
         loads = pool.loads()
-        return min(range(pool.n),
+        return min(self.candidates(pool),
                    key=lambda i: (loads[i].total_tokens,
                                   loads[i].queue_depth, i))
 
@@ -161,8 +190,8 @@ class SloHeadroomRouter(Router):
         plen = int(np.asarray(spec.prompt).reshape(-1).shape[0])
         loads = pool.loads()
         scored: List[Tuple[float, int, int]] = []
-        for i, eng in enumerate(pool.engines):
-            ld = loads[i]
+        for i in self.candidates(pool):
+            eng, ld = pool.engines[i], loads[i]
             backlog = (ld.queued_tokens + ld.prefill_backlog
                        if with_backlog else 0)
             hr = eng.queue.admission.headroom(
@@ -207,21 +236,50 @@ class ExpertAffinityRouter(Router):
 
     def choose(self, spec, pool, now):
         plen = int(np.asarray(spec.prompt).reshape(-1).shape[0])
+        cands = self.candidates(pool)
         loads = pool.loads()
-        floor = min(ld.total_tokens for ld in loads)
+        floor = min(loads[i].total_tokens for i in cands)
         # a replica is overloaded when its backlog exceeds the least-loaded
         # replica's by more than `overload_factor` x this request's own
         # work — affinity may then not justify the queueing it would eat
         limit = floor + self.overload_factor * max(plen, 1)
-        eligible = [i for i in range(pool.n)
-                    if loads[i].total_tokens <= limit]
+        eligible = [i for i in cands if loads[i].total_tokens <= limit]
         keys = pool.likely_keys()
         return max(eligible,
                    key=lambda i: (pool.engines[i].cache.residency_overlap(
                        keys), -loads[i].total_tokens, -i))
 
 
-ROUTERS = ("round_robin", "least_loaded", "slo_headroom", "expert_affinity")
+class DisaggRouter(Router):
+    """Disaggregated prefill/decode dispatch: NEW requests go to
+    prefill-capable replicas only (least-loaded among them — for a
+    prefill-role replica ``total_tokens`` is pure prefill work, held
+    requests' decode budgets are excluded); decode-role replicas receive
+    work exclusively through the KV-snapshot handoff the ClusterFrontend
+    runs each poll (``ReplicaPool.handoff_held``), which picks the decode
+    replica by THIS request's own expert-affinity (overlap between its
+    observed prefill activations and the replica's live residency), then
+    load."""
+    name = "disagg"
+
+    def candidates(self, pool):
+        cands = [i for i in pool.routable()
+                 if pool.roles[i] in ("prefill", "both")]
+        # dedicated prefill replicas take precedence over generalists
+        pref = [i for i in cands if pool.roles[i] == "prefill"]
+        cands = pref or cands
+        assert cands, "no routable prefill-capable replica"
+        return cands
+
+    def choose(self, spec, pool, now):
+        loads = pool.loads()
+        return min(self.candidates(pool),
+                   key=lambda i: (loads[i].total_tokens,
+                                  loads[i].queue_depth, i))
+
+
+ROUTERS = ("round_robin", "least_loaded", "slo_headroom", "expert_affinity",
+           "disagg")
 
 
 def make_router(name: Union[str, Router]) -> Router:
@@ -236,6 +294,8 @@ def make_router(name: Union[str, Router]) -> Router:
         return SloHeadroomRouter()
     if name == "expert_affinity":
         return ExpertAffinityRouter()
+    if name == "disagg":
+        return DisaggRouter()
     raise KeyError(f"unknown router {name!r} (have {ROUTERS})")
 
 
@@ -256,31 +316,67 @@ class ReplicaPool:
                     "replicas must not share an ExpertResidency"
         self.engines = list(engines)
         self.frontends = [ServingFrontend(e) for e in self.engines]
+        self.roles: List[str] = [getattr(e, "role", "both")
+                                 for e in self.engines]
+        self.draining: set = set()   # replica indices being drained
+        self.n_handoffs = 0          # prefill->decode KV handoffs completed
+        self.n_migrated = 0          # drain migrations completed
+        self.handoff_bytes = 0       # host-side KV bytes moved by migrate()
         self._likely_cache: Optional[FrozenSet[ExpertKey]] = None
 
     @classmethod
-    def build(cls, cfg, params, n_replicas: int, *,
+    def build(cls, cfg, params, n_replicas: Optional[int] = None, *,
               default_ttft_slo: Optional[float] = None,
+              overrides: Optional[Sequence[Optional[dict]]] = None,
               **engine_kwargs) -> "ReplicaPool":
-        """Construct `n_replicas` identical engines over shared (read-only)
-        params. `engine_kwargs` go to every BatchedServingEngine; a fresh
-        RequestQueue/AdmissionController is built per replica (passing
-        `queue=` here would alias one queue across replicas — rejected)."""
-        assert n_replicas >= 1
+        """Construct `n_replicas` engines over shared (read-only) params.
+        `engine_kwargs` go to every BatchedServingEngine; `overrides` is an
+        optional per-replica dict of engine kwargs layered on top — the
+        disaggregation knobs (``role="prefill"|"decode"``, ``max_batch``,
+        ``cache_capacity``, ``policy``, ``prefill_budget``, and a
+        per-replica ``default_ttft_slo``) so prefill replicas can carry big
+        residency pools / dense-traffic policies while decode replicas run
+        small predictor-driven ones. With `overrides` given, `n_replicas`
+        may be omitted (one replica per entry). A fresh RequestQueue/
+        AdmissionController is built per replica (passing `queue=` here
+        would alias one queue across replicas — rejected)."""
+        if overrides is not None:
+            n_replicas = len(overrides) if n_replicas is None else n_replicas
+            assert len(overrides) == n_replicas, \
+                "overrides must have one entry (or None) per replica"
+        assert n_replicas is not None and n_replicas >= 1
         assert "queue" not in engine_kwargs, \
             "per-replica queues are built here; pass default_ttft_slo"
         engines = []
-        for _ in range(n_replicas):
-            q = (RequestQueue(AdmissionController(
-                default_ttft_slo=default_ttft_slo))
-                if default_ttft_slo is not None else None)
-            engines.append(BatchedServingEngine(cfg, params, queue=q,
-                                                **engine_kwargs))
+        for r in range(n_replicas):
+            kw = dict(engine_kwargs)
+            if overrides is not None and overrides[r]:
+                assert "queue" not in overrides[r], \
+                    "per-replica queues are built here"
+                kw.update(overrides[r])
+            slo = kw.pop("default_ttft_slo", default_ttft_slo)
+            q = (RequestQueue(AdmissionController(default_ttft_slo=slo))
+                 if slo is not None else None)
+            engines.append(BatchedServingEngine(cfg, params, queue=q, **kw))
         return cls(engines)
 
     @property
     def n(self) -> int:
         return len(self.engines)
+
+    @property
+    def disagg(self) -> bool:
+        """True when any replica is phase-specialized (role != 'both') —
+        the ClusterFrontend then runs the prefill->decode handoff loop."""
+        return any(r != "both" for r in self.roles)
+
+    def routable(self) -> List[int]:
+        """Replica indices routers may send NEW requests to (everything
+        not draining)."""
+        return [i for i in range(self.n) if i not in self.draining]
+
+    def role_indices(self, *roles: str) -> List[int]:
+        return [i for i, r in enumerate(self.roles) if r in roles]
 
     def loads(self) -> List[ReplicaLoad]:
         return [e.load() for e in self.engines]
@@ -297,6 +393,120 @@ class ReplicaPool:
         if self._likely_cache is None:
             self._likely_cache = likely_expert_keys(self.engines[0])
         return self._likely_cache
+
+    # -- snapshot migration (handoff + draining) -----------------------------
+    def migrate(self, req: Request, src: int, dst: int) -> RequestHandle:
+        """Move one live request from replica `src` to `dst` via the
+        snapshot/restore primitive. The request's handle (if it was
+        submitted through a frontend) is rebound to the restored request so
+        the caller's event stream continues seamlessly — `.replica` and
+        `.handoffs` record the hop. Raw engine submissions (no handle) get
+        a fresh handle on the destination frontend."""
+        assert src != dst
+        h = self.frontends[src]._handles.pop(req.rid, None)
+        snap = self.engines[src].snapshot(req)
+        self.handoff_bytes += snap.kv_bytes
+        h = self.frontends[dst].resume(snap, handle=h, src=src, dst=dst)
+        h.replica = dst
+        return h
+
+    def _request_keys(self, req: Request) -> FrozenSet[ExpertKey]:
+        """The (layer, expert) set THIS request's prefill actually
+        activated — a per-request affinity signal (unlike the pool-wide
+        ``likely_keys`` prior) for picking its decode replica."""
+        return frozenset((l, int(e))
+                         for l, acts in enumerate(req.prefill_active)
+                         for e in acts)
+
+    def _target_for(self, req: Request, state: str,
+                    exclude: int) -> Optional[int]:
+        """Best replica to move `req` (in lifecycle `state`) to, or None if
+        no viable one exists right now: role-compatible (prefill work needs
+        a prefill-capable replica, decode work a decode-capable one), not
+        draining, KV capacity sufficient, and — except for still-queued
+        requests — a free KV slot. Ranked by overlap between the request's
+        own observed expert activations and the replica's live residency
+        (fewest handoff refetches), then load, then index."""
+        need = req.prompt_len + req.max_new + 1
+        roles_ok = {"queued": ("prefill", "both"),
+                    "prefilling": ("prefill", "both"),
+                    "running": ("decode", "both"),
+                    "held": ("decode", "both")}[state]
+        cands = []
+        for j in range(self.n):
+            if j == exclude or j in self.draining:
+                continue
+            eng = self.engines[j]
+            if self.roles[j] not in roles_ok or need > eng.W:
+                continue
+            if state == "prefilling" and not eng.chunked:
+                continue
+            if state != "queued" and not eng._free:
+                continue
+            cands.append(j)
+        if not cands:
+            return None
+        keys = self._request_keys(req)
+        loads = self.loads()
+        return max(cands,
+                   key=lambda j: (self.engines[j].cache.residency_overlap(
+                       keys), -loads[j].total_tokens, -j))
+
+    def handoff_held(self) -> int:
+        """One prefill->decode handoff pass (the ClusterFrontend runs this
+        every poll on a disaggregated pool): every held request on a
+        prefill-role replica whose KV fits a decode replica with a free
+        slot migrates there and joins its decode batch; the rest stay held
+        and retry next pass. Returns handoffs completed."""
+        moved = 0
+        for i in self.role_indices("prefill"):
+            for req in list(self.engines[i].held):
+                j = self._target_for(req, "held", exclude=i)
+                if j is None:
+                    continue
+                self.migrate(req, i, j)
+                self.n_handoffs += 1
+                moved += 1
+        return moved
+
+    # -- draining (elasticity primitive) -------------------------------------
+    def drain(self, i: int) -> int:
+        """Begin draining replica `i`: routers stop sending it NEW work
+        (``routable()`` excludes it) and its in-flight requests migrate to
+        other replicas via snapshot/restore — whatever fits a target NOW
+        moves immediately (returned count); the rest keep stepping locally
+        while the ClusterFrontend retries every poll, so a request that
+        never finds a target simply completes where it is. Reversible via
+        ``undrain``."""
+        assert 0 <= i < self.n
+        self.draining.add(i)
+        return self.migrate_draining()
+
+    def undrain(self, i: int) -> None:
+        """Return a draining replica to routable service (requests already
+        migrated away stay where they landed)."""
+        self.draining.discard(i)
+
+    def migrate_draining(self) -> int:
+        """One migration pass over every draining replica's live requests
+        (queued first — they need no target slot — then held, prefilling,
+        running). Returns migrations completed."""
+        moved = 0
+        for i in sorted(self.draining):
+            eng = self.engines[i]
+            groups = (("queued", list(eng.queue.pending)),
+                      ("held", list(eng.held)),
+                      ("prefilling", list(eng.prefilling)),
+                      ("running", list(eng.running)))
+            for state, reqs in groups:
+                for req in reqs:
+                    j = self._target_for(req, state, exclude=i)
+                    if j is None:
+                        continue
+                    self.migrate(req, i, j)
+                    self.n_migrated += 1
+                    moved += 1
+        return moved
 
 
 class ClusterFrontend(CooperativeDriver):
@@ -365,12 +575,17 @@ class ClusterFrontend(CooperativeDriver):
     # -- cooperative driving -------------------------------------------------
     @property
     def idle(self) -> bool:
-        return all(fe.idle for fe in self.pool.frontends)
+        # autopilot-paused requests keep the cluster non-idle: a later
+        # poll's scan resumes them once headroom returns
+        return all(fe.idle for fe in self.pool.frontends) and not (
+            self.autopilot is not None and self.autopilot.paused)
 
     def poll(self, now: Optional[float] = None) -> StepEvents:
         """One cluster iteration: step every replica once (replica order),
-        merge their event streams, then run the autopilot's shed scan —
-        shed FinishEvents("slo_shed") are appended to the returned stream.
+        run the pool's KV-migration passes — the prefill->decode handoff
+        on a disaggregated pool, and retry migration off draining replicas
+        — then the autopilot's shed/preempt scan (shed
+        FinishEvents("slo_shed") are appended to the returned stream).
         NOTE: merged events carry replica-LOCAL rids; consumers that track
         individual requests should hold their handles."""
         events: List = []
@@ -379,6 +594,10 @@ class ClusterFrontend(CooperativeDriver):
             ev = fe.poll(now)
             events.extend(ev)
             did_work |= ev.did_work
+        if self.pool.disagg:
+            did_work |= bool(self.pool.handoff_held())
+        if self.pool.draining:
+            did_work |= bool(self.pool.migrate_draining())
         if self.autopilot is not None:
             self.autopilot.scan_into(now, events)
         return StepEvents(events, did_work)
@@ -386,7 +605,11 @@ class ClusterFrontend(CooperativeDriver):
     # -- delegation ----------------------------------------------------------
     def cancel(self, handle: RequestHandle,
                reason: str = "cancelled") -> bool:
-        if handle.done or handle.replica is None:
+        if handle.done:
+            return False
+        if handle.req.state == "paused":
+            return self._cancel_paused(handle, reason)
+        if handle.replica is None:
             return False
         return self.pool.frontends[handle.replica].cancel(handle,
                                                           reason=reason)
@@ -428,17 +651,43 @@ class QosAutopilot:
     ``FinishEvent(reason="slo_shed")`` and counted here (``n_shed``,
     ``by_reason``; ``shed`` retains a bounded window of handles) and on
     the owning engine (``n_slo_shed``). Requests without SLOs are never
-    touched; survivors stay bit-exact."""
+    touched; survivors stay bit-exact.
+
+    Preemption (``preempt=True``) adds a second, RECOVERABLE action on top
+    of shedding: when a strictly-higher-priority request is stuck queued
+    behind a full slot pool, the lowest-priority (youngest-first) running
+    or prefilling request is PAUSED host-side via the snapshot primitive
+    (``ServingFrontend.pause`` — KV slot, residency contributions, and TBT
+    entry released exactly like a cancel, but no FinishEvent: the request
+    is parked, not killed) and resumed — bit-exactly, possibly on a
+    different replica — once headroom returns (a free slot and no
+    higher-priority work still waiting there). Paused requests are
+    excluded from every load/headroom signal (they hold no engine
+    resources); their KV lives host-side in the parked snapshots
+    (``paused_kv_bytes`` — what memory accounting should charge) and the
+    pause interval is never billed as an inter-token gap
+    (``TBTLedger.reopen``)."""
 
     def __init__(self, frontend, *, grace: float = 0.0,
-                 shed_window: Optional[int] = 512):
+                 shed_window: Optional[int] = 512,
+                 preempt: bool = False):
         self.fe = frontend
         self.grace = grace
+        self.preempt = preempt
         self.shed: Deque[RequestHandle] = collections.deque(
             maxlen=shed_window)
         self.n_shed = 0
         self.by_reason: Dict[str, int] = {"ttft": 0, "tbt": 0}
+        # (handle, snapshot) pairs parked by preemption, resumed by scan
+        self.paused: List[Tuple[RequestHandle, "RequestSnapshot"]] = []
+        self.n_preempted = 0
+        self.n_resumed = 0
         frontend.autopilot = self
+
+    @property
+    def paused_kv_bytes(self) -> int:
+        """Host bytes of KV held by currently-paused requests."""
+        return sum(s.kv_bytes for _, s in self.paused)
 
     def scan_into(self, now: Optional[float],
                   events: List) -> List[RequestHandle]:
@@ -451,8 +700,9 @@ class QosAutopilot:
         return shed_now
 
     def scan(self, now: Optional[float] = None) -> List[RequestHandle]:
-        """One shed pass over the live handles; returns the handles shed by
-        THIS pass. Called automatically after each poll once attached."""
+        """One shed pass over the live handles (then, with ``preempt=True``,
+        one resume-or-preempt pass); returns the handles shed by THIS pass.
+        Called automatically after each poll once attached."""
         now = time.perf_counter() if now is None else now
         shed_now: List[RequestHandle] = []
         for h in self.fe.live_handles():
@@ -466,7 +716,79 @@ class QosAutopilot:
                 self.n_shed += 1
                 self.by_reason[trigger] += 1
                 shed_now.append(h)
+        if self.preempt:
+            self._scan_preempt()
         return shed_now
+
+    # -- preemption (snapshot/restore consumer #2) ---------------------------
+    def _frontends(self) -> List[ServingFrontend]:
+        pool = getattr(self.fe, "pool", None)
+        return list(pool.frontends) if pool is not None else [self.fe]
+
+    def _scan_preempt(self) -> None:
+        """Resume parked requests whose headroom returned, then pause a
+        low-priority victim wherever a strictly-higher-priority request is
+        stuck queued behind a FULL slot pool. Victim order: lowest
+        priority first, youngest (largest rid) among equals — the least
+        sunk work is parked. Only requests submitted through a frontend
+        (i.e. with a handle) are preempted."""
+        for item in list(self.paused):
+            h, snap = item
+            target = self._resume_target(snap)
+            if target is None:
+                continue
+            fe, j = target
+            fe.resume(snap, handle=h, dst=j)
+            if j is not None:
+                h.replica = j
+            self.paused.remove(item)
+            self.n_resumed += 1
+        for fe in self._frontends():
+            eng = fe.engine
+            if eng._free or not len(eng.queue):
+                continue   # a free slot exists / nothing is waiting
+            top = max(r.priority for r in eng.queue.pending)
+            viable = [r for r in eng.running + eng.prefilling
+                      if r.priority < top and r.rid in fe._handles]
+            if not viable:
+                continue
+            victim = min(viable, key=lambda r: (r.priority, -r.rid))
+            h = fe._handles[victim.rid]
+            snap = fe.pause(h)
+            self.paused.append((h, snap))
+            self.n_preempted += 1
+
+    def _resume_target(self, snap: RequestSnapshot
+                       ) -> Optional[Tuple[ServingFrontend, Optional[int]]]:
+        """Where `snap` can resume NOW, or None: the engine must be able to
+        restore it (free slot, KV capacity, chunked if mid-prefill) and
+        must have no strictly-higher-priority request still queued (resume
+        must not steal the slot the preemption freed). On a disaggregated
+        pool the resume respects roles; ranked by the request's own
+        expert-affinity, then load."""
+        def ok(eng) -> bool:
+            return eng.can_restore(snap) and not any(
+                r.priority > snap.spec.priority for r in eng.queue.pending)
+
+        pool = getattr(self.fe, "pool", None)
+        if pool is None:
+            return (self.fe, None) if ok(self.fe.engine) else None
+        roles_ok = (("prefill", "both")
+                    if snap.state in ("queued", "prefilling")
+                    else ("decode", "both"))
+        keys = frozenset((l, int(e))
+                         for l, acts in enumerate(snap.prefill_active)
+                         for e in acts)
+        loads = pool.loads()
+        best = None
+        for j in pool.routable():
+            if pool.roles[j] not in roles_ok or not ok(pool.engines[j]):
+                continue
+            score = (pool.engines[j].cache.residency_overlap(keys),
+                     -loads[j].total_tokens, -j)
+            if best is None or score > best[0]:
+                best = (score, j)
+        return (pool.frontends[best[1]], best[1]) if best else None
 
     def _verdict(self, h: RequestHandle, now: float) -> Optional[str]:
         req = h.req

@@ -29,10 +29,12 @@ handle is terminal — the engine will never emit another event for it.
 """
 from __future__ import annotations
 
+import time
 from typing import Dict, Iterator, List, Optional
 
-from repro.serving.api import (Event, FinishEvent, RejectEvent, StepEvents,
-                               TokenEvent, as_request_spec)
+from repro.serving.api import (Event, FinishEvent, RejectEvent,
+                               RequestSnapshot, StepEvents, TokenEvent,
+                               as_request_spec)
 from repro.serving.batching import BatchedServingEngine, Request
 from repro.serving.engine import RequestResult
 
@@ -56,13 +58,20 @@ class RequestHandle:
         self.events: List[Event] = []
         self.finish_reason: Optional[str] = None  # incl. 'rejected'
         self.last_token_t: Optional[float] = None  # wall time of last token
+        # one record per snapshot/restore hop this request took (disagg
+        # prefill->decode handoff, preemption resume, drain migration):
+        # {"t_snapshot", "t_restore", "src", "dst"} — replica indices are
+        # None for plain-frontend pauses. Handoff latency = first
+        # TokenEvent.t after t_snapshot minus t_snapshot.
+        self.handoffs: List[dict] = []
         self._cursor = 0
 
     # -- state ---------------------------------------------------------------
     @property
     def status(self) -> str:
         """Engine-side lifecycle state: queued | prefilling | running |
-        done | rejected | cancelled."""
+        held (prefill done, awaiting KV handoff) | paused (host-side
+        snapshot, will resume) | done | rejected | cancelled."""
         return self.req.state
 
     @property
@@ -135,6 +144,8 @@ class CooperativeDriver:
     serving/cluster.py) — one definition so the two surfaces cannot
     drift."""
 
+    autopilot = None   # QosAutopilot registers itself here
+
     def drain(self, max_steps: int = 100_000) -> None:
         """Poll until idle (the frontend analogue of ``run_until_drained``;
         callers read results off the handles they kept from ``submit``)."""
@@ -142,6 +153,21 @@ class CooperativeDriver:
             if self.idle:
                 break
             self.poll()
+
+    def _cancel_paused(self, handle: RequestHandle, reason: str) -> bool:
+        """Terminate a host-paused request: the engine holds nothing for
+        it, so cancellation is dropping the snapshot (the autopilot's, if
+        it is the owner) and finishing the handle directly."""
+        ap = self.autopilot
+        if ap is not None:
+            ap.paused = [(h, s) for (h, s) in ap.paused if h is not handle]
+        req = handle.req
+        req.state = "cancelled"
+        req.finish_reason = reason
+        req.t_done = time.perf_counter()
+        handle._on_event(FinishEvent(rid=req.rid, reason=reason,
+                                     n_tokens=len(req.tokens), t=req.t_done))
+        return True
 
 
 class ServingFrontend(CooperativeDriver):
@@ -169,9 +195,47 @@ class ServingFrontend(CooperativeDriver):
         self._handles[req.rid] = handle
         return handle
 
+    # -- pause / resume (snapshot primitive, serving/api.py) -----------------
+    def pause(self, handle: RequestHandle) -> RequestSnapshot:
+        """Snapshot `handle`'s request host-side (engine resources released
+        like a cancel, NO FinishEvent — the request is paused, not
+        terminal) and unregister its event route. The caller owns the
+        returned snapshot; ``resume`` it here or on any other frontend."""
+        assert not handle.done, "cannot pause a terminal request"
+        snap = self.engine.snapshot(handle.req)
+        self._handles.pop(handle.rid, None)
+        return snap
+
+    def resume(self, snap: RequestSnapshot,
+               handle: Optional[RequestHandle] = None, *,
+               src: Optional[int] = None,
+               dst: Optional[int] = None) -> RequestHandle:
+        """Restore a snapshot into this frontend's engine. Pass the
+        original handle to keep the caller's streaming surface alive across
+        the pause — it is rebound to the restored request (fresh
+        engine-local rid) and its event stream simply continues; with no
+        handle a fresh one is created (its ``tokens`` pre-seeded with the
+        carried prefix). Records the hop on ``handle.handoffs``
+        (src/dst: replica indices when a cluster migration drives this)."""
+        req = self.engine.restore(snap)
+        if handle is None:
+            handle = RequestHandle(self, req)
+            handle.tokens = list(req.tokens)
+        else:
+            handle.req = req
+            handle.rid = req.rid
+        handle.handoffs.append({
+            "t_snapshot": snap.t_snapshot, "t_restore": time.perf_counter(),
+            "src": src, "dst": dst})
+        self._handles[req.rid] = handle
+        return handle
+
     @property
     def idle(self) -> bool:
-        return self.engine.idle
+        # host-paused requests keep the frontend non-idle: the autopilot
+        # that parked them resumes them from a later poll's scan
+        return self.engine.idle and not (
+            self.autopilot is not None and self.autopilot.paused)
 
     def poll(self, now: Optional[float] = None) -> StepEvents:
         """Advance the engine one step and deliver its events. With a
@@ -210,6 +274,8 @@ class ServingFrontend(CooperativeDriver):
                ) -> bool:
         if handle.done:
             return False
+        if handle.req.state == "paused":
+            return self._cancel_paused(handle, reason)
         ok = self.engine.cancel(handle.req, reason=reason)
         # the engine emitted FinishEvent('cancelled') synchronously; deliver
         # it now so the handle is terminal the moment cancel() returns

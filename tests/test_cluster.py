@@ -1,7 +1,11 @@
 """Cluster serving layer invariants (ISSUE 5 tentpole):
 
   * 1-replica parity — a 1-replica ClusterFrontend is bit-identical to a
-    plain ServingFrontend at temperature 0 under EVERY router policy.
+    plain ServingFrontend at temperature 0 under EVERY router policy
+    (parametrized over ROUTERS, so the PR-6 `disagg` router is covered
+    too: on an all-role-"both" pool it degrades to least-loaded dispatch
+    with no handoffs; its real prefill/decode split lives in
+    tests/test_snapshot.py).
   * N-replica exactness + residency — every request served by any replica
     reproduces the single-engine reference tokens, and every replica's
     ExpertResidency keeps the full slot-pool/ledger invariants after every

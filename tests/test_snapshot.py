@@ -1,0 +1,385 @@
+"""Snapshot/restore primitive + its three consumers (ISSUE 6 tentpole).
+
+  * Round-trip exactness — pausing a request at EVERY decode depth and at
+    several prefill-chunk depths, then resuming (same engine or another),
+    reproduces the uninterrupted run's tokens bit-exactly at temperature 0.
+  * Resource accounting — the KV slot is freed on pause (reusable by other
+    requests in between) and reacquired on resume; expert-residency
+    invariants (`assert_residency_invariants`) hold after every step; a
+    paused request vanishes from `engine.load()`.
+  * TBT ledger — host-paused time is never charged as an inter-token gap:
+    the entry closes on pause and reopens WITHOUT a baseline on resume
+    (gap counts around the pause are checked exactly).
+  * Disaggregated cluster — a 1-prefill + 1-decode pool behind the disagg
+    router is bit-exact vs the plain ServingFrontend, with every request
+    handed off (handle follows it; per-role HBM bound holds with zero
+    regrows).
+  * Autopilot preemption — a higher-priority arrival pauses the
+    lowest-priority in-flight request; both the winner and the
+    resumed victim reproduce their solo token streams.
+  * Replica draining — `ReplicaPool.drain(i)` migrates in-flight requests
+    to the survivors; everything completes bit-exactly and the drained
+    replica ends idle and unroutable.
+"""
+import jax
+import numpy as np
+import pytest
+
+from test_residency import assert_residency_invariants
+
+from repro.configs.base import get_config, reduced
+from repro.core.qos import TBTLedger
+from repro.models.model import build
+from repro.serving.api import GenerationRequest, SamplingParams
+from repro.serving.batching import BatchedServingEngine
+from repro.serving.cluster import ClusterFrontend, QosAutopilot, ReplicaPool
+from repro.serving.frontend import ServingFrontend
+
+MAX_NEW = 4
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_config("mixtral_8x7b"))
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, size=n).astype(np.int32)
+               for n in (12, 16, 9, 14)]
+    # per-prompt SOLO references (each request alone on a fresh frontend —
+    # row-wise determinism makes these equal to any batched run's tokens)
+    refs = []
+    for p in prompts:
+        fe = _fe(cfg, params)
+        h = fe.submit(_spec(p))
+        fe.drain()
+        refs.append(list(h.tokens))
+    return cfg, params, prompts, refs
+
+
+def _fe(cfg, params, **kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("prefill_budget", 3)
+    return ServingFrontend(BatchedServingEngine(
+        cfg, params, policy="duo", max_seq=32, temperature=0.0, **kw))
+
+
+def _spec(p, max_new=MAX_NEW, **kw):
+    return GenerationRequest(prompt=p,
+                             params=SamplingParams(max_new_tokens=max_new),
+                             **kw)
+
+
+def _poll_until(fe, pred, limit=500):
+    for _ in range(limit):
+        if pred():
+            return
+        fe.poll()
+    raise AssertionError("condition not reached")
+
+
+# ---------------------------------------------------------------------------
+# round-trip exactness + slot/residency/TBT accounting
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("depth", range(1, MAX_NEW + 1))
+def test_pause_resume_every_decode_depth(setup, depth):
+    """Pause after `depth` tokens, let ANOTHER request reuse the freed
+    slot, resume: tokens bit-identical to the uninterrupted run, and the
+    TBT ledger never charges the pause as a gap."""
+    cfg, params, prompts, refs = setup
+    fe = _fe(cfg, params)
+    eng = fe.engine
+    h = fe.submit(_spec(prompts[0]))
+    _poll_until(fe, lambda: len(h.tokens) >= depth)
+    assert not h.done
+    d = len(h.tokens)   # the step finishing prefill also decodes, so the
+                        # count can overshoot `depth` by one — anchor on it
+
+    snap = fe.pause(h)
+    assert h.status == "paused"
+    assert snap.state == "running" and snap.n_tokens == d
+    assert snap.kv_bytes > 0
+    # slot freed on pause; the request contributes NOTHING to load
+    assert len(eng._free) == eng.max_batch
+    assert_residency_invariants(eng.cache)
+    ld = eng.load()
+    assert ld.running == 0 and ld.decode_backlog == 0 and ld.held == 0
+    assert ld.free_slots == eng.max_batch
+
+    # another request runs to completion in between, reusing the pool
+    other = fe.submit(_spec(prompts[2]))
+    fe.drain()
+    assert other.done and list(other.tokens) == refs[2]
+    assert_residency_invariants(eng.cache)
+
+    gaps_before = len(snap.tbt_gaps)
+    assert gaps_before == d - 1   # one gap per token after the first
+    fe.resume(snap, handle=h)
+    assert h.status in ("running", "done")
+    assert len(eng._free) == eng.max_batch - 1   # slot reacquired
+    new_rid = h.rid
+    assert len(eng.tbt.by_rid.get(new_rid, ())) == gaps_before
+    if d < MAX_NEW + 1:
+        # first post-resume token: NO new gap (no baseline -> the pause
+        # interval is never billed); later ones record normally
+        _poll_until(fe, lambda: len(h.tokens) >= d + 1)
+        if len(h.tokens) == d + 1:
+            assert len(eng.tbt.by_rid.get(new_rid, ())) == gaps_before
+    fe.drain()
+    assert h.done and h.finish_reason == "length"
+    assert list(h.tokens) == refs[0], f"diverged at depth {depth}"
+    assert len(h.handoffs) == 1
+    assert_residency_invariants(eng.cache)
+
+
+@pytest.mark.parametrize("polls", [1, 2, 3])
+def test_pause_resume_mid_prefill(setup, polls):
+    """Pause while the request is still CHUNK-prefilling (several chunk
+    depths), resume, and the tokens still match the uninterrupted run."""
+    cfg, params, prompts, refs = setup
+    fe = _fe(cfg, params)
+    h = fe.submit(_spec(prompts[1]))   # 16 tokens / budget 3 -> 6 chunks
+    for _ in range(polls):
+        fe.poll()
+    assert h.status == "prefilling"
+    snap = fe.pause(h)
+    assert snap.state == "prefilling"
+    assert 0 < snap.prefill_pos < prompts[1].shape[0]
+    assert snap.n_tokens == 0
+    assert len(fe.engine._free) == fe.engine.max_batch
+    assert_residency_invariants(fe.engine.cache)
+    fe.resume(snap, handle=h)
+    fe.drain()
+    assert h.done and list(h.tokens) == refs[1], \
+        f"diverged pausing at prefill_pos={snap.prefill_pos}"
+    assert_residency_invariants(fe.engine.cache)
+
+
+def test_pause_resume_queued_and_restore_guards(setup):
+    """A still-queued request snapshots without touching any slot, and
+    `can_restore`/`restore` refuse when no free slot exists."""
+    cfg, params, prompts, refs = setup
+    fe = _fe(cfg, params)
+    eng = fe.engine
+    h1 = fe.submit(_spec(prompts[0]))
+    h2 = fe.submit(_spec(prompts[2]))
+    h3 = fe.submit(_spec(prompts[3]))
+    fe.poll()   # both slots taken; h3 still queued
+    assert h3.status == "queued"
+    snap = fe.pause(h3)
+    assert snap.state == "queued" and snap.kv_bytes == 0
+    assert len(eng.queue) == 0
+    # a slot-holding snapshot cannot restore while the pool is full
+    run_snap = fe.pause(h1)
+    assert run_snap.state == "prefilling"   # 12-token prompt, budget 3
+    h_fill = fe.submit(_spec(prompts[1]))
+    fe.poll()
+    assert not eng._free
+    assert not eng.can_restore(run_snap)
+    with pytest.raises(AssertionError):
+        eng.restore(run_snap)
+    # queued snapshots need no slot: restore re-enqueues immediately
+    assert eng.can_restore(snap)
+    fe.resume(snap, handle=h3)
+    assert h3.status == "queued"
+    fe.drain()
+    assert not eng._free or eng.idle
+    fe.resume(run_snap, handle=h1)
+    fe.drain()
+    for h, ref in zip((h1, h2, h3, h_fill),
+                      (refs[0], refs[2], refs[3], refs[1])):
+        assert h.done and list(h.tokens) == ref
+
+
+def test_tbt_ledger_reopen_unit():
+    """close()+reopen() semantics in isolation: the reopened request has
+    no baseline (first observe records nothing), carried gaps seed only
+    the per-request history, and aggregates are not double-counted."""
+    led = TBTLedger()
+    led.observe(7, 1.0)
+    led.observe(7, 1.5)
+    led.observe(7, 2.0)
+    assert list(led.by_rid[7]) == [0.5, 0.5] and led.total_gaps == 2
+    carried = list(led.by_rid[7])
+    led.close(7)
+    led.reopen(9, carried)
+    assert list(led.by_rid[9]) == [0.5, 0.5]
+    assert led.total_gaps == 2          # aggregates NOT re-fed
+    led.observe(9, 100.0)               # resume after a long pause...
+    assert list(led.by_rid[9]) == [0.5, 0.5]   # ...charges NO gap
+    assert led.max_gap() == 0.5
+    led.observe(9, 100.25)
+    assert list(led.by_rid[9]) == [0.5, 0.5, 0.25]
+    assert led.total_gaps == 3
+
+
+# ---------------------------------------------------------------------------
+# consumer 1: disaggregated prefill/decode cluster
+# ---------------------------------------------------------------------------
+
+
+def test_disagg_cluster_bit_exact(setup):
+    """1 prefill + 1 decode replica behind the disagg router: every
+    request prefills on replica 0, hands its KV snapshot to replica 1,
+    decodes there — and the tokens match the plain frontend bit-exactly.
+    Per-role expert HBM stays at each replica's fixed bound throughout."""
+    cfg, params, prompts, refs = setup
+    pool = ReplicaPool.build(
+        cfg, params, policy="duo", max_batch=2, max_seq=32,
+        temperature=0.0, prefill_budget=3,
+        overrides=[{"role": "prefill"}, {"role": "decode"}])
+    assert pool.roles == ["prefill", "decode"] and pool.disagg
+    fe = ClusterFrontend(pool, router="disagg")
+    handles = [fe.submit(_spec(p)) for p in prompts]
+    assert all(h.replica == 0 for h in handles)   # new work -> prefill
+    for _ in range(500):
+        if fe.idle:
+            break
+        fe.poll()
+        for eng in pool.engines:
+            assert_residency_invariants(eng.cache)
+    assert fe.idle
+    for h, ref in zip(handles, refs):
+        assert h.done and h.finish_reason == "length"
+        assert list(h.tokens) == ref
+        assert h.replica == 1                      # finished on decode
+        assert len(h.handoffs) == 1
+        hop = h.handoffs[0]
+        assert hop["src"] == 0 and hop["dst"] == 1
+        assert hop["t_restore"] >= hop["t_snapshot"]
+    assert pool.n_handoffs == len(prompts)
+    # role split is real: prefill replica produced ONLY first tokens
+    assert len(pool.engines[0].finished) == 0
+    assert len(pool.engines[1].finished) == len(prompts)
+    assert pool.engines[0].decode_batch_hist == []
+    for eng in pool.engines:
+        assert eng.cache.hbm_bound_ok and eng.cache.regrow_events == 0
+
+
+def test_disagg_handoff_waits_for_decode_slot(setup):
+    """With a 1-slot decode replica, handoffs serialize: a held request
+    waits on the prefill replica until the decode slot frees — and the
+    token streams still match the references."""
+    cfg, params, prompts, refs = setup
+    pool = ReplicaPool.build(
+        cfg, params, policy="duo", max_seq=32, temperature=0.0,
+        prefill_budget=3,
+        overrides=[{"role": "prefill", "max_batch": 4},
+                   {"role": "decode", "max_batch": 1}])
+    fe = ClusterFrontend(pool, router="disagg")
+    handles = [fe.submit(_spec(p)) for p in prompts]
+    saw_held_backlog = False
+    for _ in range(800):
+        if fe.idle:
+            break
+        fe.poll()
+        saw_held_backlog |= len(pool.engines[0].held) >= 2
+    assert fe.idle and saw_held_backlog
+    for h, ref in zip(handles, refs):
+        assert h.done and list(h.tokens) == ref
+
+
+# ---------------------------------------------------------------------------
+# consumer 2: autopilot preemption
+# ---------------------------------------------------------------------------
+
+
+def test_preempt_pauses_victim_and_both_streams_exact(setup):
+    """A priority-5 arrival behind a full 1-slot pool preempts the
+    priority-0 victim; the winner runs, the victim resumes — both token
+    streams match their solo references, and paused state is visible on
+    the autopilot (count + host KV bytes) while it lasts."""
+    cfg, params, prompts, refs = setup
+    fe = _fe(cfg, params, max_batch=1)
+    ap = QosAutopilot(fe, preempt=True)
+    lo = fe.submit(_spec(prompts[0], priority=0))
+    _poll_until(fe, lambda: len(lo.tokens) >= 2)
+    hi = fe.submit(_spec(prompts[2], priority=5))
+    fe.poll()   # scan preempts lo to make room
+    assert lo.status == "paused"
+    assert ap.n_preempted == 1 and len(ap.paused) == 1
+    assert ap.paused_kv_bytes > 0
+    assert not fe.idle               # paused work keeps the frontend live
+    ld = fe.engine.load()
+    assert ld.running + ld.held <= 1   # victim contributes nothing
+    fe.drain()
+    assert ap.n_resumed == 1 and not ap.paused
+    assert hi.done and list(hi.tokens) == refs[2]
+    assert lo.done and list(lo.tokens) == refs[0]
+    assert lo.finish_reason == "length" and len(lo.handoffs) == 1
+    assert_residency_invariants(fe.engine.cache)
+
+
+def test_preempt_requires_strictly_higher_priority(setup):
+    """Equal-priority arrivals never preempt: the newcomer waits for a
+    slot like always and n_preempted stays 0."""
+    cfg, params, prompts, refs = setup
+    fe = _fe(cfg, params, max_batch=1)
+    ap = QosAutopilot(fe, preempt=True)
+    first = fe.submit(_spec(prompts[0], priority=3))
+    _poll_until(fe, lambda: len(first.tokens) >= 1)
+    second = fe.submit(_spec(prompts[2], priority=3))
+    fe.poll()
+    assert first.status != "paused" and second.status == "queued"
+    fe.drain()
+    assert ap.n_preempted == 0 and ap.n_resumed == 0
+    assert list(first.tokens) == refs[0]
+    assert list(second.tokens) == refs[2]
+
+
+def test_cancel_while_paused(setup):
+    """Cancelling a paused handle drops its snapshot and finishes the
+    handle without ever touching an engine again."""
+    cfg, params, prompts, refs = setup
+    fe = _fe(cfg, params, max_batch=1)
+    ap = QosAutopilot(fe, preempt=True)
+    lo = fe.submit(_spec(prompts[0], priority=0))
+    _poll_until(fe, lambda: len(lo.tokens) >= 1)
+    hi = fe.submit(_spec(prompts[2], priority=5))
+    fe.poll()
+    assert lo.status == "paused" and ap.paused
+    assert lo.cancel()
+    assert lo.done and lo.finish_reason == "cancelled"
+    assert not ap.paused and ap.paused_kv_bytes == 0
+    fe.drain()
+    assert fe.idle and hi.done and list(hi.tokens) == refs[2]
+
+
+# ---------------------------------------------------------------------------
+# consumer 3: replica draining
+# ---------------------------------------------------------------------------
+
+
+def test_drain_migrates_in_flight_bit_exact(setup):
+    """drain(0) mid-flight moves replica 0's requests to replica 1 (what
+    fits immediately, the rest retried per poll); every stream matches its
+    reference, replica 0 ends idle, and new work routes around it until
+    undrain()."""
+    cfg, params, prompts, refs = setup
+    pool = ReplicaPool.build(cfg, params, 2, policy="duo", max_batch=4,
+                             max_seq=32, temperature=0.0, prefill_budget=3)
+    fe = ClusterFrontend(pool, router="round_robin")
+    handles = [fe.submit(_spec(p)) for p in prompts]
+    for _ in range(3):
+        fe.poll()
+    pool.drain(0)
+    assert 0 not in pool.routable()
+    rerouted = fe.submit(_spec(prompts[2], max_new=2))
+    assert rerouted.replica == 1
+    fe.drain()
+    assert fe.idle and pool.engines[0].idle
+    assert pool.n_migrated >= 1
+    for h, ref in zip(handles, refs):
+        assert h.done and h.finish_reason == "length"
+        assert list(h.tokens) == ref
+        assert h.replica == 1
+    for eng in pool.engines:
+        assert_residency_invariants(eng.cache)
+    pool.undrain(0)
+    assert pool.routable() == [0, 1]
+    back = fe.submit(_spec(prompts[0], max_new=1))
+    assert back.replica == 1   # global cursor at 5 -> 5 % 2 candidates
+    fe.drain()
+    assert back.done
