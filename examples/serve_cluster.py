@@ -20,7 +20,11 @@ Plus the two elasticity moves built on the KV snapshot primitive
 (role="prefill" / role="decode" replicas, router="disagg" — finished
 prefills hand their KV to a decode replica, handle follows, bit-exact)
 and mid-flight replica DRAINING (pool.drain(i) migrates its in-flight
-requests to the survivors, also bit-exact).
+requests to the survivors, also bit-exact). And the memory move:
+PREFIX CACHING (prefix_cache=True + router="prefix_affinity") — retired
+slots are retained as a radix tree over the KV rows, admission reuses
+the longest cached prefix, and the router co-locates same-template
+requests on the warm replica, still bit-exact vs a cold prefill.
 
   PYTHONPATH=src python examples/serve_cluster.py --replicas 2 --requests 6
   PYTHONPATH=src python examples/serve_cluster.py --smoke   # CI
@@ -179,6 +183,42 @@ def main():
           f"requests migrated), all streams bit-exact; routable="
           f"{pool2.routable()}")
     pool2.undrain(0)
+
+    # [prefix] cross-request KV reuse: two requests share prompts[0] as a
+    # template (the second appends a short suffix). With prefix_cache=True
+    # the first request's retired slot seeds the second's admission — only
+    # the suffix is prefilled — and router="prefix_affinity" steers the
+    # follower to the replica already holding the template. Tokens stay
+    # bit-exact vs a cold engine without the cache.
+    follow = np.concatenate([prompts[0],
+                             rng.integers(0, cfg.vocab, size=4,
+                                          dtype=np.int64).astype(np.int32)])
+    pref_refs = []
+    for p in (prompts[0], follow):
+        cold = ServingFrontend(BatchedServingEngine(cfg, params, **kw))
+        h = cold.submit(GenerationRequest(
+            prompt=p, params=SamplingParams(max_new_tokens=args.max_new)))
+        cold.drain()
+        pref_refs.append(list(h.tokens))
+    ppool = ReplicaPool.build(cfg, params, 2, prefix_cache=True, **kw)
+    pfe = ClusterFrontend(ppool, router="prefix_affinity")
+    ph0 = pfe.submit(GenerationRequest(
+        prompt=prompts[0],
+        params=SamplingParams(max_new_tokens=args.max_new)))
+    pfe.drain()
+    ph1 = pfe.submit(GenerationRequest(
+        prompt=follow, params=SamplingParams(max_new_tokens=args.max_new)))
+    pfe.drain()
+    assert list(ph0.tokens) == pref_refs[0], "prefix reuse diverged"
+    assert list(ph1.tokens) == pref_refs[1], "prefix reuse diverged"
+    assert ph1.replica == ph0.replica, "follower missed the warm replica"
+    warm_eng = ppool.engines[ph1.replica]
+    assert warm_eng.prefix.hit_tokens >= len(prompts[0]) - 1
+    print(f"prefix cache: follower reused {warm_eng.prefix.hit_tokens} "
+          f"cached tokens on replica {ph1.replica} "
+          f"(prefilled {warm_eng.prefilled_tokens} of "
+          f"{len(prompts[0]) + len(follow)} prompt tokens), bit-exact "
+          f"vs cold prefill")
 
     if args.smoke:
         print("serve_cluster smoke OK")

@@ -11,7 +11,11 @@ The public serving surface, top down:
     likely-expert set and each replica's live residency) / ``disagg``
     (prefill/decode phase disaggregation: per-replica role overrides, new
     requests to prefill replicas, finished-prefill KV snapshots handed to
-    the decode replica with the best per-request expert affinity).
+    the decode replica with the best per-request expert affinity) /
+    ``prefix_affinity`` (overload-gated longest-cached-prefix routing:
+    each replica scored by ``BatchedServingEngine.prefix_score`` — its
+    radix ``PrefixTree`` contents PLUS the prompts of live requests, so a
+    burst of same-template arrivals co-locates on one replica).
     ``ClusterFrontend`` keeps the exact single-engine surface below, and
     ``QosAutopilot`` (attachable to either front-end) sheds requests whose
     TTFT/TBT deadline is already unmeetable mid-flight
@@ -25,6 +29,19 @@ The public serving surface, top down:
     prefix gathered host-side, engine resources released like a cancel,
     resume is bit-exact on any engine that fits the request (frontends'
     ``pause``/``resume`` rebind the live ``RequestHandle`` across hops).
+    With prefix caching on the destination, ``ReplicaPool.migrate`` ships
+    only the KV *tail* past the receiver's longest cached prefix
+    (``snapshot(req, kv_start=head)``; ``restore`` reseeds the head from
+    the destination's own cache — still bit-exact, bytes-on-the-wire
+    accounted in ``handoff_bytes_saved``).
+  * ``core.prefix.PrefixTree`` + ``BatchedServingEngine(prefix_cache=
+    True)`` — cross-request prefix/KV reuse: retired slots are retained
+    as a token-level radix tree over the slot-pool KV rows; admission
+    copies the longest cached prefix into the new request's carry
+    buffers and prefills only the un-hit suffix (admission charges only
+    that suffix), with LRU whole-slot eviction reclaiming tree-owned
+    slots on demand. Reused prefixes are bit-exact vs a cold prefill at
+    temperature 0 (tests/test_prefix.py).
   * ``api`` — the typed vocabulary: ``SamplingParams`` (frozen sampling
     spec: temperature, max_new_tokens, stop_token_ids, seed),
     ``GenerationRequest`` (prompt + params + ttft_slo/tbt_slo QoS targets +

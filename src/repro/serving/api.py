@@ -144,10 +144,17 @@ class RequestSnapshot:
     rng_state: Optional[dict]
     source_rid: int
     t_snapshot: float
+    # tail-only handoff (cross-request prefix reuse, core/prefix.py): the
+    # dense kv_k/kv_v arrays cover positions [kv_start, P) — the shared
+    # head [0, kv_start) is NOT shipped, the restoring engine rebuilds it
+    # from its own PrefixTree (restore asserts the head is present; 0 =
+    # the full-prefix snapshot every pre-existing consumer produces)
+    kv_start: int = 0
 
     @property
     def kv_bytes(self) -> int:
-        """Host bytes the captured KV prefix occupies while paused."""
+        """Host bytes the captured KV prefix occupies while paused (a
+        tail-only snapshot only counts the rows it actually carries)."""
         return sum(a.nbytes for a in self.kv_k) + \
             sum(a.nbytes for a in self.kv_v)
 

@@ -76,6 +76,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cache import ExpertKey
+from repro.core.prefix import PrefixTree
 from repro.core.qos import (Admission, AdmissionController, ReplicaLoad,
                             TBTLedger)
 from repro.core.scheduler import DuoServeScheduler
@@ -106,6 +107,7 @@ class Request:
     finish_reason: Optional[str] = None  # length|stop_token|cancelled|slo_shed
     slot: int = -1
     prefill_pos: int = 0             # prompt tokens already prefilled
+    prefix_len: int = 0              # leading tokens seeded from PrefixTree
     tokens: List[int] = dataclasses.field(default_factory=list)
     prefill_active: List[List[int]] = dataclasses.field(default_factory=list)
     active_sets: Optional[List[set]] = None   # accumulating, chunked prefill
@@ -171,6 +173,14 @@ class Request:
             finish_reason=self.finish_reason or "length")
 
 
+def kv_row_bytes(engine: "BatchedServingEngine") -> int:
+    """Host bytes one KV row (one position: K+V across all layers)
+    occupies — the unit ``ReplicaPool.handoff_bytes_saved`` counts when a
+    tail-only snapshot skips shipping the shared head."""
+    return int(2 * engine.L * engine.cfg.n_kv_heads * engine.cfg.hd
+               * np.dtype(PDT).itemsize)
+
+
 def parse_prefill_budget(v: Union[int, str, None]) -> Union[int, str, None]:
     """CLI-string form of `prefill_budget`: int tokens, "auto"
     (LatencyModel-tuned, needs tbt_slo), or None/"none" for monolithic.
@@ -224,7 +234,8 @@ class RequestQueue:
     def pop_admissible(self, now: float, limit: int, *,
                        backlog_tokens: int = 0, running_batch: int = 0,
                        chunk_budget: Optional[int] = None,
-                       chunk_adaptive: bool = False) -> List[Request]:
+                       chunk_adaptive: bool = False,
+                       hit_fn=None) -> List[Request]:
         out: List[Request] = []
         ahead = backlog_tokens
         taken: List[Request] = []
@@ -233,8 +244,13 @@ class RequestQueue:
         for req in sorted(self.pending, key=lambda r: -r.priority):
             if len(out) >= limit:
                 break
+            # prefix-cache-aware charging: `hit_fn` (the engine's read-only
+            # PrefixTree peek) reports how many leading prompt tokens are
+            # already cached, so the TTFT prediction and the backlog each
+            # admitted request contributes charge only the un-hit suffix
+            hit = hit_fn(req) if hit_fn is not None else 0
             verdict = self.admission.decide(
-                now, req.arrival, req.prompt_len, ahead, req.ttft_slo,
+                now, req.arrival, req.prompt_len - hit, ahead, req.ttft_slo,
                 running_batch=running_batch, chunk_budget=chunk_budget,
                 tbt_slo=req.tbt_slo, chunk_adaptive=chunk_adaptive)
             if verdict is Admission.QUEUE:
@@ -247,7 +263,7 @@ class RequestQueue:
                 req.state = "rejected"
                 self.rejected.append(req)
                 continue
-            ahead += req.prompt_len
+            ahead += req.prompt_len - hit
             out.append(req)
         for req in taken:
             self.pending.remove(req)
@@ -271,6 +287,16 @@ class BatchedServingEngine(EngineCore):
         all prefilling requests (one chunk shape, fair progress over
         steps); "srf" serves shortest-remaining-first; "fifo" always
         spends the budget head-of-line.
+    prefix_cache: enable cross-request prefix/KV reuse (core/prefix.py):
+        on admit the engine matches the prompt against a radix tree over
+        the slot pool, copies the longest cached prefix's KV rows into the
+        new request's buffers, and prefills only the un-hit suffix
+        (admission charges only that suffix too). Completed prompts are
+        offered back to the tree; a retiring request's slot is RETAINED as
+        tree-owned cache while nodes reference it and reclaimed LRU when a
+        free slot is needed. Bit-exact vs cold prefill at temperature 0
+        (the copied rows are exactly what prefill would recompute —
+        tests/test_prefix.py).
     tbt_slo: engine-default inter-token-gap bound (seconds) for the auto
         budget; per-request `tbt_slo` values tighten it.
     finished_window: retain only the most recent N finished/cancelled
@@ -291,6 +317,7 @@ class BatchedServingEngine(EngineCore):
                  tbt_window: Optional[int] = 8192,
                  queue: Optional[RequestQueue] = None,
                  role: str = "both",
+                 prefix_cache: bool = False,
                  stats=None, predictor=None, cache_capacity=None,
                  temperature: float = 0.0, sample_seed: int = 0):
         super().__init__(cfg, params, policy, stats=stats,
@@ -337,6 +364,11 @@ class BatchedServingEngine(EngineCore):
         self.cancelled: Deque[Request] = collections.deque(
             maxlen=finished_window)
         self.tbt = TBTLedger(window=tbt_window)
+        # cross-request prefix/KV reuse (core/prefix.py); prefilled_tokens
+        # counts prompt tokens that actually ran through prefill kernels —
+        # with hits it is strictly less than the sum of prompt lengths
+        self.prefix = PrefixTree() if prefix_cache else None
+        self.prefilled_tokens = 0
         self._next_rid = 0
         self._pf_rr = 0   # round-robin rotation cursor across steps
         self.step_count = 0
@@ -502,12 +534,80 @@ class BatchedServingEngine(EngineCore):
                                 for r in self.prefilling),
             running=len(self.running),
             decode_backlog=dec,
-            free_slots=len(self._free),
+            free_slots=len(self._free) + (self.prefix.n_reclaimable()
+                                          if self.prefix is not None else 0),
             held=len(self.held))
+
+    @property
+    def slot_available(self) -> bool:
+        """A KV slot could be handed out right now — free, or reclaimable
+        from tree-owned prefix cache by LRU eviction."""
+        return bool(self._free) or (self.prefix is not None
+                                    and self.prefix.n_reclaimable() > 0)
+
+    def _acquire_slot(self) -> int:
+        """Pop a free KV slot, evicting tree-owned cached prefixes (LRU)
+        to reclaim one when the free list is empty."""
+        if not self._free and self.prefix is not None:
+            self._free.extend(self.prefix.evict_for(1))
+        return self._free.pop()
 
     def _release_slot(self, req: Request) -> None:
         self._slot_pos[req.slot, :] = -1
+        if self.prefix is not None:
+            if self.prefix.slot_released(req.slot):
+                # the tree still references this slot's rows: the slot
+                # becomes tree-owned prefix cache instead of returning to
+                # the free list (reclaimed by _acquire_slot's LRU eviction)
+                return
         self._free.append(req.slot)
+
+    # -- cross-request prefix/KV reuse (core/prefix.py) ----------------------
+    def _prefix_peek(self, req: Request) -> int:
+        """Read-only longest cached prefix usable by `req`, capped at
+        prompt_len - 1 so the final prompt position always prefills (its
+        logits produce the first token). Admission charges only the
+        remainder."""
+        if self.prefix is None or req.prompt_len < 2:
+            return 0
+        return self.prefix.peek(req.prompt, limit=req.prompt_len - 1)
+
+    def _prefix_match(self, req: Request):
+        """Acquire the longest cached prefix for an admitted request: pins
+        the tree path (the caller releases it once the rows are copied
+        out) and returns (n_hit, the (slot, lo, hi) row blocks to copy).
+        ``req.prefix_len`` records the hit as a per-request stat."""
+        if self.prefix is None or req.prompt_len < 2:
+            return 0, []
+        n_hit, blocks = self.prefix.match(req.prompt,
+                                          limit=req.prompt_len - 1)
+        req.prefix_len = n_hit
+        return n_hit, blocks
+
+    def _prefix_insert(self, req: Request) -> None:
+        """Offer the request's full prompt KV (now resident in its slot,
+        rows 0..S-1) to the tree — called at every point a prompt's KV
+        lands in the slot pool: monolithic admit, final prefill chunk,
+        and 'running' restore."""
+        if self.prefix is not None and req.prompt_len:
+            self.prefix.insert(req.prompt, req.slot)
+
+    def _seeded_pf(self, n_hit: int, blocks):
+        """Fresh per-request prefill carry buffers with rows [0, n_hit)
+        seeded from the tree's slot-pool blocks. Slot row == absolute
+        position (the ring never wraps), so the copy is row-for-row and
+        bit-identical to what cold prefill would have written."""
+        hkv, hd = self.cfg.n_kv_heads, self.cfg.hd
+        pf_k = [jnp.zeros((1, self.W, hkv, hd), PDT) for _ in range(self.L)]
+        pf_v = [jnp.zeros_like(pf_k[l]) for l in range(self.L)]
+        for l in range(self.L):
+            for s, a, b in blocks:
+                pf_k[l] = pf_k[l].at[0, a:b].set(self._K[l][s, a:b])
+                pf_v[l] = pf_v[l].at[0, a:b].set(self._V[l][s, a:b])
+        sp = np.full((1, self.W), -1, np.int32)
+        if n_hit:
+            sp[0, :n_hit] = np.arange(n_hit, dtype=np.int32)
+        return pf_k, pf_v, jnp.asarray(sp)
 
     def _release_expert_contributions(self, req: Request) -> None:
         """Drop the cancelled request's expert-residency contributions: the
@@ -549,7 +649,46 @@ class BatchedServingEngine(EngineCore):
                 return r
         return None
 
-    def snapshot(self, req: Union[Request, int]) -> RequestSnapshot:
+    def prefix_score(self, prompt, limit: Optional[int] = None) -> int:
+        """Router scoring signal (cluster prefix_affinity): the longest
+        leading run of `prompt` this engine could serve from cache BY THE
+        TIME the request would prefill — the tree's current contents PLUS
+        the prompts of every live request (queued/prefilling/running/held
+        work is KV the tree will hold before a new arrival is admitted
+        behind it). Read-only; 0 without a prefix tree."""
+        if self.prefix is None:
+            return 0
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        cap = (int(prompt.shape[0]) if limit is None
+               else min(int(limit), int(prompt.shape[0])))
+        if cap <= 0:
+            return 0
+        best = self.prefix.peek(prompt, limit=cap)
+        for r in (list(self.queue.pending) + self.prefilling
+                  + self.running + self.held):
+            n = min(cap, r.prompt_len)
+            if n <= best:
+                continue
+            neq = np.nonzero(r.prompt[:n] != prompt[:n])[0]
+            best = max(best, int(neq[0]) if neq.size else n)
+        return best
+
+    def prefix_head_for(self, req: Request) -> int:
+        """How many leading KV rows of `req` THIS engine could rebuild
+        from its own prefix tree — the shared head a tail-only handoff
+        (``other.snapshot(req, kv_start=head)`` -> ``self.restore``) need
+        not ship host-side. Capped at the prompt region actually captured
+        (the tree only caches prompt rows)."""
+        if self.prefix is None or req.state == "queued":
+            return 0
+        have = (req.prefill_pos if req.state == "prefilling" else req.pos)
+        cap = min(req.prompt_len, have)
+        if cap <= 0:
+            return 0
+        return self.prefix.peek(req.prompt, limit=cap)
+
+    def snapshot(self, req: Union[Request, int], *,
+                 kv_start: int = 0) -> RequestSnapshot:
         """Pause a live request and capture it as a host-side, engine-
         portable ``RequestSnapshot`` (serving/api.py).
 
@@ -565,7 +704,14 @@ class BatchedServingEngine(EngineCore):
         the request is not terminal, it is host-side; its state becomes
         'paused' and this engine never references it again. A ``held``
         request snapshots with state='running' — prefill is complete, any
-        decode-capable engine resumes it straight into its batch."""
+        decode-capable engine resumes it straight into its batch.
+
+        ``kv_start`` > 0 makes the snapshot TAIL-ONLY: the dense KV arrays
+        cover positions ``[kv_start, P)`` and the destination rebuilds the
+        shared head ``[0, kv_start)`` from its OWN prefix tree at restore
+        (``ReplicaPool.migrate`` picks kv_start via the destination's
+        ``prefix_head_for``). The head must lie inside the prompt region —
+        only prompt rows are reconstructible from a prefix tree."""
         if isinstance(req, int):
             found = self.find_request(req)
             assert found is not None, f"no live request with rid {req}"
@@ -579,14 +725,17 @@ class BatchedServingEngine(EngineCore):
         kv_k: List[np.ndarray] = []
         kv_v: List[np.ndarray] = []
         if req.state == "queued":
+            assert kv_start == 0, "a queued snapshot carries no KV"
             ok = self.queue.remove(req)
             assert ok, "queued request not in its queue"
             state = "queued"
         elif req.state == "prefilling":
             P = req.prefill_pos
+            assert 0 <= kv_start <= min(P, req.prompt_len), \
+                f"kv_start {kv_start} outside captured prompt region"
             for l in range(self.L):
-                kv_k.append(np.asarray(req.pf_k[l][0, :P]))
-                kv_v.append(np.asarray(req.pf_v[l][0, :P]))
+                kv_k.append(np.asarray(req.pf_k[l][0, kv_start:P]))
+                kv_v.append(np.asarray(req.pf_v[l][0, kv_start:P]))
             self.prefilling.remove(req)
             self._release_expert_contributions(req)
             self._release_slot(req)
@@ -595,9 +744,11 @@ class BatchedServingEngine(EngineCore):
             # running/held: positions 0..pos-1 are written (the latest
             # token's KV lands when IT is decoded, not when sampled)
             P = req.pos
+            assert 0 <= kv_start <= min(P, req.prompt_len), \
+                f"kv_start {kv_start} outside captured prompt region"
             for l in range(self.L):
-                kv_k.append(np.asarray(self._K[l][req.slot, :P]))
-                kv_v.append(np.asarray(self._V[l][req.slot, :P]))
+                kv_k.append(np.asarray(self._K[l][req.slot, kv_start:P]))
+                kv_v.append(np.asarray(self._V[l][req.slot, kv_start:P]))
             (self.running if req.state == "running"
              else self.held).remove(req)
             self._release_expert_contributions(req)
@@ -616,7 +767,8 @@ class BatchedServingEngine(EngineCore):
             tbt_gaps=list(self.tbt.by_rid.get(req.rid, ())),
             rng_state=(req.rng.bit_generator.state
                        if req.rng is not None else None),
-            source_rid=req.rid, t_snapshot=time.perf_counter())
+            source_rid=req.rid, t_snapshot=time.perf_counter(),
+            kv_start=kv_start)
         self.tbt.close(req.rid)
         req.state = "paused"
         req.slot = -1
@@ -626,15 +778,21 @@ class BatchedServingEngine(EngineCore):
 
     def can_restore(self, snap: RequestSnapshot) -> bool:
         """Whether ``restore(snap)`` would succeed right now: the request
-        fits a KV slot (always true for a still-queued snapshot) and, mid-
-        prefill, this engine can run chunked prefill."""
+        fits a KV slot (always true for a still-queued snapshot), mid-
+        prefill this engine can run chunked prefill, and a tail-only
+        snapshot's shared head is present in this engine's prefix tree."""
         prompt = np.asarray(snap.spec.prompt).reshape(-1)
         need = int(prompt.shape[0]) + snap.spec.params.max_new_tokens + 1
         if need > self.W:
             return False
+        if snap.kv_start and (
+                self.prefix is None
+                or self.prefix.peek(prompt,
+                                    limit=snap.kv_start) < snap.kv_start):
+            return False
         if snap.state == "queued":
             return True
-        return bool(self._free) and \
+        return self.slot_available and \
             (snap.state != "prefilling" or self.chunked)
 
     def restore(self, snap: RequestSnapshot) -> Request:
@@ -673,8 +831,22 @@ class BatchedServingEngine(EngineCore):
             req.state = "queued"
             self.queue.submit(req)
             return req
-        assert self._free, "no free KV slot to restore into"
-        slot = self._free.pop()
+        # tail-only snapshot: rebuild the shared head [0, kv_start) from
+        # THIS engine's prefix tree. Match (and pin) the head path BEFORE
+        # acquiring a slot — _acquire_slot may evict tree-owned cache, and
+        # a pinned path is never evicted from under us; the pin drops as
+        # soon as the head rows are copied below.
+        head = snap.kv_start
+        blocks: List = []
+        if head:
+            assert self.prefix is not None, \
+                "tail-only snapshot needs a prefix tree on the target"
+            n_hit, blocks = self.prefix.match(req.prompt, limit=head)
+            assert n_hit == head, \
+                f"target lost the shared head: have {n_hit} of {head} rows"
+            req.prefix_len = head
+        assert self.slot_available, "no free KV slot to restore into"
+        slot = self._acquire_slot()
         req.slot = slot
         self._slot_pos[slot, :] = -1
         if snap.state == "prefilling":
@@ -683,13 +855,13 @@ class BatchedServingEngine(EngineCore):
             req.state = "prefilling"
             req.prefill_pos = P
             req.active_sets = [set(s) for s in snap.active_sets]
-            hkv, hd = self.cfg.n_kv_heads, self.cfg.hd
-            req.pf_k = [jnp.zeros((1, self.W, hkv, hd), PDT)
-                        .at[0, :P].set(jnp.asarray(snap.kv_k[l], PDT))
-                        for l in range(self.L)]
-            req.pf_v = [jnp.zeros((1, self.W, hkv, hd), PDT)
-                        .at[0, :P].set(jnp.asarray(snap.kv_v[l], PDT))
-                        for l in range(self.L)]
+            req.pf_k, req.pf_v, _ = self._seeded_pf(head, blocks)
+            for l in range(self.L):
+                if P > head:
+                    req.pf_k[l] = req.pf_k[l].at[0, head:P].set(
+                        jnp.asarray(snap.kv_k[l], PDT))
+                    req.pf_v[l] = req.pf_v[l].at[0, head:P].set(
+                        jnp.asarray(snap.kv_v[l], PDT))
             sp = np.full((1, self.W), -1, np.int32)
             sp[0, :P] = np.arange(P, dtype=np.int32)
             req.pf_sp = jnp.asarray(sp)
@@ -698,13 +870,22 @@ class BatchedServingEngine(EngineCore):
             assert snap.state == "running", f"bad state {snap.state!r}"
             P = req.pos
             for l in range(self.L):
-                self._K[l] = self._K[l].at[slot, :P].set(
-                    jnp.asarray(snap.kv_k[l], PDT))
-                self._V[l] = self._V[l].at[slot, :P].set(
-                    jnp.asarray(snap.kv_v[l], PDT))
+                K, V = self._K[l], self._V[l]
+                for s, a, b in blocks:
+                    K = K.at[slot, a:b].set(self._K[l][s, a:b])
+                    V = V.at[slot, a:b].set(self._V[l][s, a:b])
+                if P > head:
+                    K = K.at[slot, head:P].set(jnp.asarray(snap.kv_k[l],
+                                                           PDT))
+                    V = V.at[slot, head:P].set(jnp.asarray(snap.kv_v[l],
+                                                           PDT))
+                self._K[l], self._V[l] = K, V
             self._slot_pos[slot, :P] = np.arange(P, dtype=np.int32)
             req.prefill_pos = req.prompt_len
+            self._prefix_insert(req)
             self._finish_prefill(req)   # running, or held on role='prefill'
+        if head:
+            self.prefix.release(req.prompt, head)   # head rows are copied
         self.tbt.reopen(req.rid, snap.tbt_gaps)
         return req
 
@@ -719,45 +900,71 @@ class BatchedServingEngine(EngineCore):
         """
         n_rej = len(self.queue.rejected)
         backlog = sum(r.prefill_remaining for r in self.prefilling)
+        free_now = len(self._free) + (self.prefix.n_reclaimable()
+                                      if self.prefix is not None else 0)
         newly = self.queue.pop_admissible(
-            now, limit=len(self._free), backlog_tokens=backlog,
+            now, limit=free_now, backlog_tokens=backlog,
             running_batch=len(self.running),
             chunk_budget=self._current_budget(),
-            chunk_adaptive=self.prefill_budget == "auto")
+            chunk_adaptive=self.prefill_budget == "auto",
+            hit_fn=(self._prefix_peek if self.prefix is not None else None))
         for r in self.queue.rejected[n_rej:]:
             self._emit(RejectEvent(rid=r.rid, reason="slo",
                                    t=time.perf_counter()))
         for req in newly:
-            slot = self._free.pop()
-            req.slot = slot
             req.t_start = now
+            # longest cached prefix (capped at S-1): match pins the path
+            # only while its rows are copied into fresh carry buffers —
+            # once seeded, the pin drops so _acquire_slot below may evict
+            # ANY tree-owned slot, including the donor's (at max_batch=1
+            # the hit's own donor slot is exactly the one reclaimed)
+            n_hit, blocks = self._prefix_match(req)
+            pf_k = pf_v = pf_sp = None
+            if n_hit:
+                pf_k, pf_v, pf_sp = self._seeded_pf(n_hit, blocks)
+                self.prefix.release(req.prompt, n_hit)
+            slot = self._acquire_slot()
+            req.slot = slot
             self._slot_pos[slot, :] = -1
             if self.chunked:
                 req.state = "prefilling"
-                req.prefill_pos = 0
+                req.prefill_pos = n_hit
                 req.active_sets = [set() for _ in range(self.L)]
-                hkv, hd = self.cfg.n_kv_heads, self.cfg.hd
-                req.pf_k = [jnp.zeros((1, self.W, hkv, hd), PDT)
-                            for _ in range(self.L)]
-                req.pf_v = [jnp.zeros_like(req.pf_k[l])
-                            for l in range(self.L)]
-                req.pf_sp = jnp.full((1, self.W), -1, jnp.int32)
+                if pf_k is None:
+                    pf_k, pf_v, pf_sp = self._seeded_pf(0, [])
+                req.pf_k, req.pf_v, req.pf_sp = pf_k, pf_v, pf_sp
                 self.prefilling.append(req)
                 continue
             req.state = "running"
             t0 = time.perf_counter()
-            logits, (kc, vc), active, _ = self.prefill_layers(
-                req.prompt.reshape(1, -1))
             S = req.prompt_len
-            for l in range(self.L):
-                self._K[l] = self._K[l].at[slot, :S].set(kc[l][0])
-                self._V[l] = self._V[l].at[slot, :S].set(vc[l][0])
+            if n_hit:
+                # monolithic engine with a hit: run the un-hit suffix as
+                # ONE whole chunk over the seeded carry buffers — the
+                # chunked==monolithic exactness invariant makes the tokens
+                # bit-identical to a cold whole-prompt prefill
+                logits, pf_k, pf_v, pf_sp, active, _ = self.prefill_chunk(
+                    req.prompt[None, n_hit:], n_hit, pf_k, pf_v, pf_sp,
+                    need_logits=True)
+                for l in range(self.L):
+                    self._K[l] = self._K[l].at[slot, :S].set(pf_k[l][0, :S])
+                    self._V[l] = self._V[l].at[slot, :S].set(pf_v[l][0, :S])
+                active = [sorted(set(a)) for a in active]
+            else:
+                logits, (kc, vc), active, _ = self.prefill_layers(
+                    req.prompt.reshape(1, -1))
+                for l in range(self.L):
+                    self._K[l] = self._K[l].at[slot, :S].set(kc[l][0])
+                    self._V[l] = self._V[l].at[slot, :S].set(vc[l][0])
             self._slot_pos[slot, :S] = np.arange(S, dtype=np.int32)
             req.prefill_pos = S
             req.prefill_active = active
+            self.prefilled_tokens += S - n_hit
+            self._prefix_insert(req)
             tok = self._sample_req(req, logits[0])
             self._emit_token(req, tok, time.perf_counter(), first=True)
-            self.queue.admission.model.observe_prefill(S, req.t_first - t0)
+            self.queue.admission.model.observe_prefill(S - n_hit,
+                                                       req.t_first - t0)
             self._finish_prefill(req)
         return newly
 
@@ -795,6 +1002,7 @@ class BatchedServingEngine(EngineCore):
         for l in range(self.L):
             req.active_sets[l].update(act[l])
         req.prefill_pos = stop
+        self.prefilled_tokens += C
         self.queue.admission.model.observe_prefill(
             C, time.perf_counter() - t0)
         if final:
@@ -806,6 +1014,7 @@ class BatchedServingEngine(EngineCore):
             req.pf_k = req.pf_v = req.pf_sp = None
             req.prefill_active = [sorted(s) for s in req.active_sets]
             req.active_sets = None
+            self._prefix_insert(req)
             tok = self._sample_req(req, logits[0])
             self._emit_token(req, tok, time.perf_counter(), first=True)
             self.prefilling.remove(req)

@@ -28,6 +28,13 @@ Routers (``make_router``):
     replica's live residency ledger (``CacheState.residency_overlap``);
     load-overloaded replicas are excluded first (production-stack's
     overload-detector-then-affinity order), ties broken by load.
+  * ``prefix_affinity``— rank replicas by the length of the request's
+    prompt prefix already cached in each replica's ``PrefixTree``
+    (``peek`` — read-only), same overload-gate-then-affinity ordering as
+    ``expert_affinity``: matching requests land on the warm replica, so N
+    replicas become a sharded prefix cache instead of N cold copies
+    (requires engines built with ``prefix_cache=True``; degrades to
+    least-loaded otherwise).
   * ``disagg``         — disaggregated prefill/decode dispatch (the paper's
     dual-phase split at cluster scale, ROADMAP item 1): NEW requests go to
     prefill-role replicas only; when a prefill completes, the request sits
@@ -86,7 +93,8 @@ from repro.core.cache import ExpertKey
 from repro.core.qos import AdmissionController, ReplicaLoad
 from repro.serving.api import (GenerationRequest, RejectEvent,
                                RequestSnapshot, StepEvents, as_request_spec)
-from repro.serving.batching import BatchedServingEngine, Request, RequestQueue
+from repro.serving.batching import (BatchedServingEngine, Request,
+                                    RequestQueue, kv_row_bytes)
 from repro.serving.frontend import (CooperativeDriver, RequestHandle,
                                     ServingFrontend)
 
@@ -250,6 +258,42 @@ class ExpertAffinityRouter(Router):
                        keys), -loads[i].total_tokens, -i))
 
 
+class PrefixAffinityRouter(Router):
+    """Max cached-prefix overlap between the request's prompt and each
+    replica (``BatchedServingEngine.prefix_score`` — the ``PrefixTree``'s
+    current contents plus every live request's prompt, so a BURST of
+    same-template arrivals co-locates even before the first one has
+    prefilled; KV-side affinity, the sibling of ``expert_affinity``'s
+    residency overlap), among non-overloaded replicas. The overload gate
+    comes FIRST with the same factor/ordering as expert_affinity: prefix
+    hits shorten prefill, which attracts more matching requests, so
+    without the gate the warm-replica feedback loop would pile unbounded
+    load onto one replica. Ties break by load then index; replicas
+    without a prefix tree score 0, so on a cold or tree-less pool this
+    degrades to least-loaded."""
+    name = "prefix_affinity"
+
+    def __init__(self, overload_factor: float = 2.0):
+        self.overload_factor = overload_factor
+
+    def choose(self, spec, pool, now):
+        prompt = np.asarray(spec.prompt, np.int32).reshape(-1)
+        plen = int(prompt.shape[0])
+        cands = self.candidates(pool)
+        loads = pool.loads()
+        floor = min(loads[i].total_tokens for i in cands)
+        limit = floor + self.overload_factor * max(plen, 1)
+        eligible = [i for i in cands if loads[i].total_tokens <= limit]
+
+        # cap at plen-1 — the engine never reuses the final prompt
+        # position (its logits produce the first token), so score exactly
+        # the rows a hit could actually save
+        cap = max(plen - 1, 0)
+        return max(eligible,
+                   key=lambda i: (pool.engines[i].prefix_score(prompt, cap),
+                                  -loads[i].total_tokens, -i))
+
+
 class DisaggRouter(Router):
     """Disaggregated prefill/decode dispatch: NEW requests go to
     prefill-capable replicas only (least-loaded among them — for a
@@ -279,7 +323,7 @@ class DisaggRouter(Router):
 
 
 ROUTERS = ("round_robin", "least_loaded", "slo_headroom", "expert_affinity",
-           "disagg")
+           "prefix_affinity", "disagg")
 
 
 def make_router(name: Union[str, Router]) -> Router:
@@ -294,6 +338,8 @@ def make_router(name: Union[str, Router]) -> Router:
         return SloHeadroomRouter()
     if name == "expert_affinity":
         return ExpertAffinityRouter()
+    if name == "prefix_affinity":
+        return PrefixAffinityRouter()
     if name == "disagg":
         return DisaggRouter()
     raise KeyError(f"unknown router {name!r} (have {ROUTERS})")
@@ -322,6 +368,8 @@ class ReplicaPool:
         self.n_handoffs = 0          # prefill->decode KV handoffs completed
         self.n_migrated = 0          # drain migrations completed
         self.handoff_bytes = 0       # host-side KV bytes moved by migrate()
+        self.handoff_bytes_saved = 0  # head bytes NOT shipped (prefix reuse)
+        self.n_tail_handoffs = 0     # migrations that shipped a partial tail
         self._likely_cache: Optional[FrozenSet[ExpertKey]] = None
 
     @classmethod
@@ -401,11 +449,24 @@ class ReplicaPool:
         submitted through a frontend) is rebound to the restored request so
         the caller's event stream continues seamlessly — `.replica` and
         `.handoffs` record the hop. Raw engine submissions (no handle) get
-        a fresh handle on the destination frontend."""
+        a fresh handle on the destination frontend.
+
+        When the destination's prefix tree already holds the request's
+        shared head (``prefix_head_for``), the snapshot is TAIL-ONLY: only
+        the unique KV tail crosses host-side (``handoff_bytes`` grows by
+        the tail alone; the head rows avoided are accounted in
+        ``handoff_bytes_saved``) and restore rebuilds the head from the
+        destination's own tree — bit-identical rows, deterministic
+        prefill."""
         assert src != dst
         h = self.frontends[src]._handles.pop(req.rid, None)
-        snap = self.engines[src].snapshot(req)
+        head = self.engines[dst].prefix_head_for(req)
+        snap = self.engines[src].snapshot(req, kv_start=head)
         self.handoff_bytes += snap.kv_bytes
+        if head:
+            self.handoff_bytes_saved += head * kv_row_bytes(
+                self.engines[src])
+            self.n_tail_handoffs += 1
         h = self.frontends[dst].resume(snap, handle=h, src=src, dst=dst)
         h.replica = dst
         return h
@@ -441,7 +502,7 @@ class ReplicaPool:
                 continue
             if state == "prefilling" and not eng.chunked:
                 continue
-            if state != "queued" and not eng._free:
+            if state != "queued" and not eng.slot_available:
                 continue
             cands.append(j)
         if not cands:
@@ -745,7 +806,7 @@ class QosAutopilot:
             self.n_resumed += 1
         for fe in self._frontends():
             eng = fe.engine
-            if eng._free or not len(eng.queue):
+            if eng.slot_available or not len(eng.queue):
                 continue   # a free slot exists / nothing is waiting
             top = max(r.priority for r in eng.queue.pending)
             viable = [r for r in eng.running + eng.prefilling

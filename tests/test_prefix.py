@@ -1,0 +1,441 @@
+"""Cross-request prefix/KV reuse battery (ISSUE 7 tentpole).
+
+  * Exactness — a prefix-hit request's tokens are bit-identical to the
+    cold-prefill reference at temperature 0, across {monolithic,
+    chunked[1, 3, whole-prompt]} engines x {full hit, partial hit landing
+    mid-chunk, zero hit} x mid-flight admission; expert-residency
+    invariants (`assert_residency_invariants`) and the tree's structural
+    invariants hold after every step (KV reuse must not touch the expert
+    HBM bound).
+  * Slot lifecycle — donor-evicted-then-hit (eviction falls back to cold
+    prefill, still bit-exact) and hit-after-slot-reuse (a reclaimed slot's
+    NEW contents are matched, never the stale donor rows).
+  * Accounting — `prefilled_tokens` charges only the un-hit suffix, and
+    TTFT is measured from ARRIVAL, not from hit-seeding (a full hit does
+    not fabricate a negative/zero TTFT).
+  * Cluster — the `prefix_affinity` router lands matching requests on the
+    warm replica (overload-gated, like `expert_affinity`).
+  * PrefixTree properties — deterministic random-walk driver (hypothesis
+    mirror per the test_cache_parity.py convention) checking longest-match
+    vs a brute-force reference, refcounts never negative, eviction never
+    freeing a pinned (live-request) path, and referenced rows staying
+    within the pool.
+"""
+import jax
+import numpy as np
+import pytest
+
+from test_residency import assert_residency_invariants
+
+from repro.configs.base import get_config, reduced
+from repro.core.prefix import PrefixTree
+from repro.models.model import build
+from repro.serving.api import GenerationRequest, SamplingParams
+from repro.serving.batching import BatchedServingEngine
+from repro.serving.cluster import ClusterFrontend, ReplicaPool
+from repro.serving.frontend import ServingFrontend
+
+MAX_NEW = 4
+SHARED = 10          # tokens of shared head between donor and partial probe
+BUDGETS = [None, 1, 3, 16]   # monolithic, tiny, mid-prompt, whole-prompt
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_config("mixtral_8x7b"))
+    bundle = build(cfg)
+    params = bundle.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    shared = rng.integers(0, cfg.vocab, size=SHARED).astype(np.int32)
+
+    def mk(n):
+        return np.concatenate(
+            [shared, rng.integers(0, cfg.vocab, size=n).astype(np.int32)])
+
+    prompts = {
+        "donor": mk(4),                          # S=14, seeds the cache
+        "partial": mk(5),                        # S=15, hit == SHARED
+        "zero": rng.integers(0, cfg.vocab, size=12).astype(np.int32),
+    }
+    prompts["full"] = prompts["donor"].copy()    # identical -> hit S-1
+    # force the intended hit shapes whatever the rng drew: the partial
+    # probe diverges AT position SHARED, the zero probe at position 0
+    prompts["partial"][SHARED] = (prompts["donor"][SHARED] + 1) % cfg.vocab
+    prompts["zero"][0] = (prompts["donor"][0] + 1) % cfg.vocab
+    prompts["zero_ext"] = np.concatenate(        # extends "zero" by 4
+        [prompts["zero"], rng.integers(0, cfg.vocab, size=4).astype(np.int32)])
+    # SOLO cold references on fresh tree-less frontends (row-wise
+    # determinism makes these equal to any batched run's tokens)
+    refs = {}
+    for name, p in prompts.items():
+        fe = _fe(cfg, params)
+        h = fe.submit(_spec(p))
+        fe.drain()
+        refs[name] = list(h.tokens)
+    return cfg, params, prompts, refs
+
+
+def _fe(cfg, params, **kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("prefill_budget", 3)
+    return ServingFrontend(BatchedServingEngine(
+        cfg, params, policy="duo", max_seq=32, temperature=0.0, **kw))
+
+
+def _spec(p, max_new=MAX_NEW, **kw):
+    return GenerationRequest(prompt=p,
+                             params=SamplingParams(max_new_tokens=max_new),
+                             **kw)
+
+
+def _drain(fe, limit=2000):
+    """Drive to idle, checking residency + tree invariants EVERY step."""
+    eng = fe.engine
+    for _ in range(limit):
+        if fe.idle:
+            return
+        fe.poll()
+        assert_residency_invariants(eng.cache)
+        if eng.prefix is not None:
+            eng.prefix.check_invariants(eng.W)
+    raise AssertionError("engine did not drain")
+
+
+EXPECTED_HIT = {"full": 13, "partial": SHARED, "zero": 0}  # donor S=14
+
+
+# ---------------------------------------------------------------------------
+# exactness battery: engines x probes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("budget", BUDGETS)
+@pytest.mark.parametrize("probe", ["full", "partial", "zero"])
+def test_prefix_hit_bit_exact(setup, budget, probe):
+    """Warm the tree with the donor, then replay each probe: tokens must be
+    bit-identical to the cold solo reference, the hit length exact, and
+    `prefilled_tokens` must charge only the un-hit suffix."""
+    cfg, params, prompts, refs = setup
+    fe = _fe(cfg, params, prefill_budget=budget, prefix_cache=True)
+    eng = fe.engine
+    hd = fe.submit(_spec(prompts["donor"]))
+    _drain(fe)
+    assert list(hd.tokens) == refs["donor"]
+    assert eng.prefix.hit_tokens == 0        # cold cache: donor missed
+    base = eng.prefilled_tokens
+    assert base == len(prompts["donor"])     # donor fully charged
+
+    hp = fe.submit(_spec(prompts[probe]))
+    _drain(fe)
+    assert list(hp.tokens) == refs[probe], \
+        f"prefix-hit tokens diverged (budget={budget}, probe={probe})"
+    hit = EXPECTED_HIT[probe]
+    assert eng.prefix.hit_tokens == hit
+    assert eng.prefilled_tokens - base == len(prompts[probe]) - hit
+    eng.prefix.check_invariants(eng.W)
+
+
+def test_mid_flight_admission_hit(setup):
+    """A probe arriving while another request is mid-chunked-prefill still
+    hits the tree and reproduces its solo tokens."""
+    cfg, params, prompts, refs = setup
+    fe = _fe(cfg, params, prefill_budget=3, max_batch=3, prefix_cache=True)
+    eng = fe.engine
+    hd = fe.submit(_spec(prompts["donor"]))
+    _drain(fe)
+    hz = fe.submit(_spec(prompts["zero"]))
+    fe.poll()                                 # zero-hit req mid-prefill
+    assert eng.prefilling, "expected an in-flight chunked prefill"
+    hp = fe.submit(_spec(prompts["partial"]))
+    _drain(fe)
+    assert list(hd.tokens) == refs["donor"]
+    assert list(hz.tokens) == refs["zero"]
+    assert list(hp.tokens) == refs["partial"]
+    assert eng.prefix.hit_tokens == SHARED
+
+
+# ---------------------------------------------------------------------------
+# slot lifecycle: eviction + slot reuse
+# ---------------------------------------------------------------------------
+
+
+def test_donor_evicted_then_probe_still_exact(setup):
+    """max_batch=1: the retained donor slot is the ONLY admission slack, so
+    a non-matching arrival must reclaim it (LRU eviction); a later probe
+    that WOULD have hit falls back to cold prefill, still bit-exact."""
+    cfg, params, prompts, refs = setup
+    fe = _fe(cfg, params, max_batch=1, prefix_cache=True)
+    eng = fe.engine
+    fe.submit(_spec(prompts["donor"]))
+    _drain(fe)
+    # slot retained by the tree, not returned to the free list
+    assert not eng._free and eng.prefix.n_reclaimable() == 1
+    assert eng.slot_available and eng.load().free_slots == 1
+
+    fe.submit(_spec(prompts["zero"]))
+    _drain(fe)                                # forced donor eviction
+    assert eng.prefix.reclaimed_slots == 1
+
+    h = fe.submit(_spec(prompts["full"]))
+    _drain(fe)
+    assert list(h.tokens) == refs["full"]
+    assert eng.prefix.hit_tokens == 0         # donor cache was gone
+
+
+def test_hit_after_slot_reuse(setup):
+    """A reclaimed slot refilled by a NEW request must serve hits for the
+    NEW prompt — and seeding must survive the reused slot being the very
+    slot the new request evicts (copy-then-evict at max_batch=1)."""
+    cfg, params, prompts, refs = setup
+    fe = _fe(cfg, params, max_batch=1, prefix_cache=True)
+    eng = fe.engine
+    fe.submit(_spec(prompts["donor"]))
+    _drain(fe)
+    fe.submit(_spec(prompts["zero"]))         # evicts donor, reuses slot
+    _drain(fe)
+    h = fe.submit(_spec(prompts["zero_ext"]))  # must hit zero's NEW rows
+    _drain(fe)
+    assert list(h.tokens) == refs["zero_ext"]
+    assert eng.prefix.hit_tokens == len(prompts["zero"])
+    assert eng.prefix.reclaimed_slots == 2    # donor slot, then zero's
+
+
+# ---------------------------------------------------------------------------
+# accounting: TTFT from arrival, not hit-seeding
+# ---------------------------------------------------------------------------
+
+
+def test_ttft_measured_from_arrival(setup):
+    """A full-hit request still pays TTFT from its ARRIVAL stamp: seeding
+    the head from cache must not fabricate a TTFT near zero (or negative)
+    relative to a backdated arrival."""
+    cfg, params, prompts, refs = setup
+    fe = _fe(cfg, params, prefix_cache=True)
+    fe.submit(_spec(prompts["donor"]))
+    _drain(fe)
+    import time
+    back = time.perf_counter() - 5.0          # arrived "5 seconds ago"
+    h = fe.submit(_spec(prompts["full"], arrival=back))
+    _drain(fe)
+    assert list(h.tokens) == refs["full"]
+    res = h.req.result()
+    assert res.ttft_wall >= 5.0               # queue wait counted
+    assert fe.engine.prefix.hit_tokens == EXPECTED_HIT["full"]
+
+
+# ---------------------------------------------------------------------------
+# cluster: prefix_affinity routing
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_affinity_routes_to_warm_replica(setup):
+    """Matching requests land on the replica whose tree holds the prefix;
+    tokens stay bit-exact and the cold replica records zero hits."""
+    cfg, params, prompts, refs = setup
+    pool = ReplicaPool.build(cfg, params, 2, policy="duo", max_batch=2,
+                             max_seq=32, temperature=0.0, prefill_budget=3,
+                             prefix_cache=True)
+    cf = ClusterFrontend(pool, router="prefix_affinity")
+    hd = cf.submit(_spec(prompts["donor"]))
+    warm = hd.replica
+    while not cf.idle:
+        cf.poll()
+    hp = cf.submit(_spec(prompts["partial"]))
+    assert hp.replica == warm, "probe should follow the warm prefix"
+    while not cf.idle:
+        cf.poll()
+        for eng in pool.engines:
+            assert_residency_invariants(eng.cache)
+            eng.prefix.check_invariants(eng.W)
+    assert list(hd.tokens) == refs["donor"]
+    assert list(hp.tokens) == refs["partial"]
+    assert pool.engines[warm].prefix.hit_tokens == SHARED
+    assert pool.engines[1 - warm].prefix.hits == 0
+
+
+def test_prefix_affinity_overload_gate(setup):
+    """The warm replica stops attracting traffic once its backlog exceeds
+    the overload gate — the feedback loop cannot pile unbounded load."""
+    cfg, params, prompts, refs = setup
+    pool = ReplicaPool.build(cfg, params, 2, policy="duo", max_batch=4,
+                             max_seq=32, temperature=0.0, prefill_budget=1,
+                             prefix_cache=True)
+    cf = ClusterFrontend(pool, router="prefix_affinity")
+    hd = cf.submit(_spec(prompts["donor"]))
+    warm = hd.replica
+    while not cf.idle:
+        cf.poll()
+    # pile matching requests WITHOUT polling: all of them prefer `warm`,
+    # but the gate must spill some to the cold replica once warm's backlog
+    # exceeds overload_factor x their own prompt length
+    handles = [cf.submit(_spec(prompts["partial"])) for _ in range(8)]
+    assert {h.replica for h in handles} == {0, 1}, \
+        "overload gate never spilled to the cold replica"
+    while not cf.idle:
+        cf.poll()
+    for h in handles:
+        assert list(h.tokens) == refs["partial"]
+
+
+# ---------------------------------------------------------------------------
+# PrefixTree properties: random-walk driver vs brute-force reference
+# ---------------------------------------------------------------------------
+
+
+class _RefModel:
+    """Brute-force mirror of the tree's VISIBLE state: the set of cached
+    token sequences (per backing slot), with whole-slot eviction."""
+
+    def __init__(self):
+        self.seqs = {}            # slot -> tuple(tokens)
+
+    def insert(self, toks, slot):
+        self.seqs[slot] = tuple(toks)
+
+    def evict(self, slots):
+        for s in slots:
+            self.seqs.pop(s, None)
+
+    def longest(self, toks, limit=None):
+        n_max = len(toks) if limit is None else min(limit, len(toks))
+        best = 0
+        for s in self.seqs.values():
+            m = 0
+            while m < min(len(s), n_max) and s[m] == toks[m]:
+                m += 1
+            best = max(best, m)
+        return best
+
+
+def _rand_tokens(rng, model, vocab=4, max_len=12):
+    """Random query/insert sequence, biased to share prefixes with the
+    cached population so splits/partial matches are exercised hard."""
+    if model.seqs and rng.random() < 0.7:
+        base = list(model.seqs.values())[
+            int(rng.integers(len(model.seqs)))]
+        cut = int(rng.integers(0, len(base) + 1))
+        tail_n = int(rng.integers(0, max_len))
+        tail = rng.integers(0, vocab, size=tail_n)
+        return tuple(base[:cut]) + tuple(int(t) for t in tail)
+    n = int(rng.integers(1, max_len + 1))
+    return tuple(int(t) for t in rng.integers(0, vocab, size=n))
+
+
+def _tree_walk(seed, n_ops=150, n_slots=6, n_rows=16):
+    """One randomized lifecycle: insert/match/release/retire/evict against
+    the brute-force mirror, asserting after EVERY op that
+      * longest-match agrees with the reference (exact: the mirror tracks
+        evictions, so no slack is needed),
+      * no eviction ever shortens a PINNED (held) path,
+      * structural invariants hold (refs >= 0, per-slot rows disjoint and
+        within the ring, by-slot index in sync),
+      * referenced rows never exceed the pool (n_slots * n_rows)."""
+    rng = np.random.default_rng(seed)
+    tree = PrefixTree()
+    ref = _RefModel()
+    free = list(range(n_slots))
+    live = {}                  # slot -> tokens (donor request still live)
+    held = []                  # (tokens, n_hit) pins awaiting release
+    for _ in range(n_ops):
+        op = rng.choice(["insert", "match", "release", "retire", "evict"])
+        if op == "insert" and free:
+            toks = _rand_tokens(rng, ref)
+            toks = toks[:n_rows]            # ring bound, like the engine
+            slot = free.pop(int(rng.integers(len(free))))
+            if tree.insert(toks, slot):
+                ref.insert(toks, slot)
+            # a fully-covered insert creates NO node: the sequence's
+            # matchability is tied to the covering slots, so the mirror
+            # must not credit it to this one
+            live[slot] = toks
+        elif op == "match":
+            q = _rand_tokens(rng, ref)
+            limit = (None if rng.random() < 0.5
+                     else int(rng.integers(0, len(q) + 1)))
+            n_hit, blocks = tree.match(q, limit)
+            assert n_hit == ref.longest(q, limit), \
+                f"longest-match diverged from brute force (seed={seed})"
+            # blocks tile [0, n_hit) in order, each within the ring
+            pos = 0
+            for s, a, b in blocks:
+                assert a == pos and b > a and b <= n_rows
+                pos = b
+            assert pos == n_hit
+            if n_hit:
+                held.append((q, n_hit))
+            tree.check_invariants(n_rows)
+        elif op == "release" and held:
+            q, n_hit = held.pop(int(rng.integers(len(held))))
+            tree.release(q, n_hit)
+        elif op == "retire" and live:
+            slot = list(live)[int(rng.integers(len(live)))]
+            del live[slot]
+            if not tree.slot_released(slot):
+                free.append(slot)
+                ref.evict([slot])           # no nodes left -> gone
+        elif op == "evict":
+            freed = tree.evict_for(int(rng.integers(1, 3)))
+            assert not set(freed) & set(live), \
+                "evicted a live request's slot"
+            free.extend(freed)
+            ref.evict(freed)
+        tree.check_invariants(n_rows)
+        # eviction never frees a node on a held (pinned) path
+        for q, n_hit in held:
+            assert tree.peek(q, limit=n_hit) == n_hit, \
+                "a pinned path was evicted"
+        assert tree.cached_rows() <= n_slots * n_rows
+        assert set(tree.nodes_by_slot) <= set(range(n_slots))
+    # drain: release every pin, retire every live slot, evict everything
+    for q, n_hit in held:
+        tree.release(q, n_hit)
+    for slot in list(live):
+        tree.slot_released(slot)
+    tree.evict_for(n_slots)
+    tree.check_invariants(n_rows)
+    assert tree.n_reclaimable() == 0
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_tree_walk_deterministic(seed):
+    """Deterministic mirror of the hypothesis property (always runs)."""
+    _tree_walk(seed)
+
+
+def test_tree_walk_hypothesis():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+    settings.register_profile("prefix", max_examples=25, deadline=None)
+    settings.load_profile("prefix")
+
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def run(seed):
+        _tree_walk(seed, n_ops=60)
+
+    run()
+
+
+def test_tree_refcount_underflow_rejected():
+    """Releasing more than was matched trips the refcount assertion."""
+    tree = PrefixTree()
+    tree.insert((1, 2, 3), 0)
+    n, _ = tree.match((1, 2, 3))
+    assert n == 3
+    tree.release((1, 2, 3), 3)
+    with pytest.raises(AssertionError):
+        tree.release((1, 2, 3), 3)          # double release
+
+
+def test_tree_split_preserves_pins():
+    """Splitting a held edge (a shorter second match) keeps both release
+    walks balanced — the split tail inherits the refcount."""
+    tree = PrefixTree()
+    tree.insert((1, 2, 3, 4), 0)
+    n_a, _ = tree.match((1, 2, 3, 4))       # pins the whole edge
+    n_b, _ = tree.match((1, 2), limit=2)    # splits it mid-span
+    assert (n_a, n_b) == (4, 2)
+    tree.check_invariants()
+    tree.release((1, 2, 3, 4), 4)
+    tree.release((1, 2), 2)
+    tree.check_invariants()
+    assert all(n.refs == 0 for n in tree.nodes())

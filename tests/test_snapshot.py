@@ -31,7 +31,7 @@ from repro.configs.base import get_config, reduced
 from repro.core.qos import TBTLedger
 from repro.models.model import build
 from repro.serving.api import GenerationRequest, SamplingParams
-from repro.serving.batching import BatchedServingEngine
+from repro.serving.batching import BatchedServingEngine, kv_row_bytes
 from repro.serving.cluster import ClusterFrontend, QosAutopilot, ReplicaPool
 from repro.serving.frontend import ServingFrontend
 
@@ -383,3 +383,126 @@ def test_drain_migrates_in_flight_bit_exact(setup):
     assert back.replica == 1   # global cursor at 5 -> 5 % 2 candidates
     fe.drain()
     assert back.done
+
+
+# ---------------------------------------------------------------------------
+# tail-only handoff (cross-request prefix reuse, ISSUE 7)
+# ---------------------------------------------------------------------------
+
+
+def test_disagg_tail_handoff_bit_exact_and_cheaper(setup):
+    """Disagg handoff with a warm shared head on the decode replica ships
+    only the unique tail: bit-exact vs the full-prefix handoff, and the
+    bytes moved drop by exactly head * kv_row_bytes."""
+    cfg, params, _, _ = setup
+    rng = np.random.default_rng(11)
+    head = rng.integers(0, cfg.vocab, size=8).astype(np.int32)
+    shared = [np.concatenate([head, rng.integers(0, cfg.vocab, size=n)
+                              .astype(np.int32)]) for n in (5, 6)]
+    shared[1][8] = (shared[0][8] + 1) % cfg.vocab  # diverge right after head
+    refs = []
+    for p in shared:
+        fe = _fe(cfg, params)
+        h = fe.submit(_spec(p))
+        fe.drain()
+        refs.append(list(h.tokens))
+
+    def run(prefix_cache):
+        pool = ReplicaPool.build(
+            cfg, params, policy="duo", max_batch=2, max_seq=32,
+            temperature=0.0, prefill_budget=3, prefix_cache=prefix_cache,
+            overrides=[{"role": "prefill"}, {"role": "decode"}])
+        fe = ClusterFrontend(pool, router="disagg")
+        toks = []
+        for p in shared:          # sequential: the 2nd finds a warm head
+            h = fe.submit(_spec(p))
+            fe.drain()
+            toks.append(list(h.tokens))
+        return pool, toks
+
+    cold_pool, cold_toks = run(prefix_cache=False)
+    warm_pool, warm_toks = run(prefix_cache=True)
+    assert cold_toks == refs and warm_toks == refs
+    assert cold_pool.n_tail_handoffs == 0
+    assert cold_pool.handoff_bytes_saved == 0
+    # the 2nd warm handoff shipped only the tail...
+    assert warm_pool.n_tail_handoffs == 1
+    assert warm_pool.handoff_bytes_saved == 8 * kv_row_bytes(
+        warm_pool.engines[0])
+    # ...so total bytes moved strictly dropped, by exactly the head
+    assert warm_pool.handoff_bytes < cold_pool.handoff_bytes
+    assert warm_pool.handoff_bytes + warm_pool.handoff_bytes_saved \
+        == cold_pool.handoff_bytes
+
+
+def test_preempt_resume_prefix_reusing_request(setup):
+    """A request that itself seeded its KV from the prefix tree pauses and
+    resumes bit-exactly — both mid-decode and mid-(seeded)-prefill."""
+    cfg, params, _, _ = setup
+    rng = np.random.default_rng(12)
+    donor = rng.integers(0, cfg.vocab, size=14).astype(np.int32)
+    probe = np.concatenate([donor[:9],
+                            rng.integers(0, cfg.vocab, size=6)
+                            .astype(np.int32)])
+    probe[9] = (donor[9] + 1) % cfg.vocab
+    fe0 = _fe(cfg, params)
+    h0 = fe0.submit(_spec(probe))
+    fe0.drain()
+    ref = list(h0.tokens)
+
+    # mid-decode pause/resume of a prefix-hit request
+    fe = _fe(cfg, params, prefix_cache=True)
+    eng = fe.engine
+    fe.submit(_spec(donor))
+    fe.drain()
+    h = fe.submit(_spec(probe))
+    _poll_until(fe, lambda: len(h.tokens) >= 2)
+    assert eng.prefix.hit_tokens == 9
+    snap = fe.pause(h)
+    fe.resume(snap, h)
+    fe.drain()
+    assert list(h.tokens) == ref
+    eng.prefix.check_invariants(eng.W)
+
+    # mid-prefill pause/resume: pause while the seeded request is still
+    # chunking its un-hit suffix (prefill_pos starts AT the hit length)
+    fe2 = _fe(cfg, params, prefix_cache=True)
+    eng2 = fe2.engine
+    fe2.submit(_spec(donor))
+    fe2.drain()
+    h2 = fe2.submit(_spec(probe))
+    fe2.poll()                       # admit + first 3-token chunk
+    assert h2.status == "prefilling"
+    snap2 = fe2.pause(h2)
+    assert snap2.state == "prefilling" and snap2.prefill_pos >= 9
+    fe2.resume(snap2, h2)
+    fe2.drain()
+    assert list(h2.tokens) == ref
+    assert_residency_invariants(eng2.cache)
+    eng2.prefix.check_invariants(eng2.W)
+
+
+def test_tbt_reopen_aggregates_not_double_fed():
+    """Regression pin for the windowed/P^2 aggregates on reopen: carried
+    gaps seed ONLY the per-request history — the shared window, both
+    sketches, the lifetime count, and the max are untouched, and the next
+    observe after resume feeds each aggregate exactly once."""
+    led = TBTLedger()
+    for t in (1.0, 1.5, 2.1, 2.4):
+        led.observe(3, t)
+    carried = list(led.by_rid[3])
+    before = (list(led.gaps), {q: sk.count for q, sk in led.sketches.items()},
+              led.total_gaps, led.max_gap())
+    led.close(3)
+    led.reopen(8, carried)
+    after = (list(led.gaps), {q: sk.count for q, sk in led.sketches.items()},
+             led.total_gaps, led.max_gap())
+    assert after == before, "reopen re-fed the aggregates"
+    assert list(led.by_rid[8]) == carried
+    led.observe(8, 50.0)             # resume baseline: no gap anywhere
+    assert (led.total_gaps, list(led.gaps)) == (before[2], before[0])
+    led.observe(8, 50.2)             # first real post-resume gap...
+    assert led.total_gaps == before[2] + 1   # ...feeds each aggregate once
+    assert all(sk.count == before[1][q] + 1
+               for q, sk in led.sketches.items())
+    assert len(led.gaps) == len(before[0]) + 1
