@@ -13,7 +13,14 @@ Group size is approximated by the axis the op shards over — we report with
 g = 16 (model axis; the dominant group in this sharding).
 
 MODEL_FLOPS = 6*N*D (dense params N, tokens D) for train (3x forward) and
-2*N*D for prefill/decode forward-only; MoE uses active params.
+2*N*D for prefill/decode forward-only; MoE uses active params — i.e. the
+SPARSE (grouped) expert accounting: per token only its top_k experts' rows
+count. The serving engines' dense full-batch decode discipline used to
+spend U (distinct experts) x B (batch) row evaluations per layer instead;
+``decode_expert_flops`` makes that dense-vs-grouped delta explicit from a
+layer's [B, k] selection matrix, and ``expert_flops_per_row`` is the
+per-(token, expert) unit the engines' PerfCounters row totals convert with
+(benchmarks/bench_latency --grouped).
 """
 from __future__ import annotations
 
@@ -21,6 +28,8 @@ import glob
 import json
 import os
 from typing import Dict, Optional
+
+import numpy as np
 
 from repro.configs.base import ARCH_IDS, INPUT_SHAPES, get_config
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
@@ -75,6 +84,34 @@ def param_counts(cfg) -> Dict[str, float]:
             total += per_attn + 3 * d * cfg.d_ff  # one shared block
         active = total
     return {"total": total, "active": active}
+
+
+def expert_flops_per_row(cfg) -> float:
+    """FLOPs of ONE (token, expert) FFN row evaluation: three
+    d_model x d_expert GEMM rows (gate, up, down) at 2 FLOPs/MAC."""
+    return 6.0 * cfg.d_model * cfg.d_expert
+
+
+def decode_expert_flops(cfg, selections) -> Dict[str, float]:
+    """Per-layer decode expert FLOPs under the two execution disciplines.
+
+    ``selections``: [B, k] expert picks of one layer's batched decode step.
+    The dense full-batch path evaluates every DISTINCT expert over all B
+    rows (U * B row evaluations); the segment-gathered path evaluates only
+    each expert's selecting rows (sum of per-expert selecting-row counts,
+    <= B * k). The roofline's active-param accounting above corresponds to
+    the grouped figure — the dense one is the redundancy sparse execution
+    removes."""
+    sel = np.asarray(selections)
+    B = sel.shape[0]
+    uniq = np.unique(sel)
+    dense_rows = int(uniq.size) * B
+    grouped_rows = int(sum(int(np.any(sel == e, axis=1).sum())
+                           for e in uniq))
+    per = expert_flops_per_row(cfg)
+    return {"dense_rows": dense_rows, "grouped_rows": grouped_rows,
+            "dense_flops": dense_rows * per,
+            "grouped_flops": grouped_rows * per}
 
 
 def model_flops(cfg, shape) -> float:

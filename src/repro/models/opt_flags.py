@@ -13,6 +13,11 @@ flag; ``--optimized`` in dryrun.py turns on the whole set.
   REPRO_OPT_ACTIVE_GATHER  — small-T (decode) MoE dispatch gathers only the
       most-loaded A local experts' weights instead of computing all E_local
       densely (the DuoServe insight applied to on-chip HBM traffic).
+  REPRO_OPT_GROUPED_FFN    — serving engines route the segment-gathered
+      expert sweeps (grouped decode, fused prefill) through the Pallas
+      ``expert_ffn_from_pool`` streaming kernel and turn the fused
+      single-launch prefill path on by default. OFF = grouped einsum with
+      engine-identical numerics (bit-exact vs the dense per-expert path).
 """
 from __future__ import annotations
 
@@ -35,6 +40,16 @@ def active_gather() -> bool:
     return _flag("REPRO_OPT_ACTIVE_GATHER")
 
 
+def grouped_ffn() -> bool:
+    """Pallas backend for the serving engines' grouped expert execution
+    (serving/engine.py): the one-launch-per-layer expert sweeps read their
+    weights off the ExpertResidency slot pools via ``expert_ffn_from_pool``
+    (f32 kernel accumulation — kernel-grade numerics, pinned by interpret
+    parity tests, NOT bit-equal to the engine einsum), and engines default
+    ``fused_prefill`` to on."""
+    return _flag("REPRO_OPT_GROUPED_FFN")
+
+
 def seq_parallel() -> bool:
     """Megatron-style sequence parallelism: pin the residual stream
     seq-sharded over the tensor axis at block boundaries, turning the
@@ -47,6 +62,7 @@ FLAGS = {
     "static_window": "REPRO_OPT_STATIC_WINDOW",
     "attn_bf16": "REPRO_OPT_ATTN_BF16",
     "active_gather": "REPRO_OPT_ACTIVE_GATHER",
+    "grouped_ffn": "REPRO_OPT_GROUPED_FFN",
     "seq_parallel": "REPRO_OPT_SEQ_PARALLEL",
 }
 

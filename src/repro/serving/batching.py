@@ -84,7 +84,7 @@ from repro.models.layers import PDT
 from repro.serving.api import (FinishEvent, GenerationRequest, RejectEvent,
                                RequestSnapshot, SamplingParams, StepEvents,
                                TokenEvent)
-from repro.serving.engine import EngineCore, RequestResult
+from repro.serving.engine import EngineCore, RequestResult, group_by_expert
 
 
 @dataclasses.dataclass
@@ -318,6 +318,8 @@ class BatchedServingEngine(EngineCore):
                  queue: Optional[RequestQueue] = None,
                  role: str = "both",
                  prefix_cache: bool = False,
+                 grouped_decode: bool = True,
+                 fused_prefill: Optional[bool] = None,
                  stats=None, predictor=None, cache_capacity=None,
                  temperature: float = 0.0, sample_seed: int = 0):
         super().__init__(cfg, params, policy, stats=stats,
@@ -326,7 +328,14 @@ class BatchedServingEngine(EngineCore):
                          sched_batch=max_batch,
                          prefill_chunk=(prefill_budget
                                         if isinstance(prefill_budget, int)
-                                        else None))
+                                        else None),
+                         fused_prefill=fused_prefill)
+        # grouped_decode=True (default): the batched decode expert sweep is
+        # segment-gathered — each distinct expert computes only its
+        # selecting rows, one FFN launch per layer (bit-exact vs the dense
+        # full-batch path, which False retains as the A/B baseline)
+        self.grouped_decode = grouped_decode
+        self.decode_step_wall: List[float] = []
         self.max_batch = max_batch
         self.W = max_seq
         if prefill_budget == "auto":
@@ -1073,7 +1082,9 @@ class BatchedServingEngine(EngineCore):
         """One batched decode step: every request advances by one token.
 
         Per-row accumulation follows each request's own top-k order, so the
-        result is bit-identical to B independent single-request steps.
+        result is bit-identical to B independent single-request steps —
+        on BOTH expert-execution disciplines (grouped_decode segment-gather
+        default, dense full-batch baseline).
         Output goes through the `_emit_token` event sink.
         """
         B = len(batch)
@@ -1120,17 +1131,37 @@ class BatchedServingEngine(EngineCore):
             for b, r in enumerate(batch):
                 r.hits += len(set(selections[b]) & hit_set)
                 r.misses += len(set(selections[b]) & miss_set)
-            # one pre-gate output per DISTINCT expert across the batch,
-            # each read by slot index out of the shared residency pools
-            # (pools re-read after every slot(): a pending transfer swaps
-            # in a fresh pool array object)
-            raw: Dict[int, jnp.ndarray] = {}
-            for e in union:
-                eslot = jnp.int32(self.cache.slot((l, e)))
-                raw[e] = self._expert_raw(xn, *self.cache.pools,
-                                          eslot)  # f32 [B, d]
+            self.perf.decode_layers += 1
+            self.perf.decode_rows_dense += len(union) * B
             acc = self._shared(self._moe_dev(l), xn)
-            if union:
+            if union and self.grouped_decode:
+                # segment-gathered sweep: ONE launch computes only each
+                # expert's selecting rows ([U, C, d] instead of U x [B, d]),
+                # slots resolved in one vectorized pass; the scatter-back
+                # walks j = 0..k-1 so every row still accumulates in its
+                # OWN top-k order — bit-identical to the dense path below
+                disp = group_by_expert(ids_np, union, bucket_cap=B)
+                raw_g = self._grouped_ffn_raw(l, union, xn, disp.row_idx)
+                self.perf.decode_ffn_launches += 1
+                self.perf.decode_rows_grouped += disp.n_rows
+                self.perf.decode_rows_launched += disp.n_launched
+                for j in range(self.k):
+                    y = raw_g[jnp.asarray(disp.u_of[:, j]),
+                              jnp.asarray(disp.c_of[:, j])]  # f32 [B, d]
+                    acc = acc + (y * w[:, j, None]).astype(acc.dtype)
+            elif union:
+                # dense full-batch baseline: one pre-gate output per
+                # DISTINCT expert, each over all B rows, read by slot index
+                # out of the shared residency pools (pools re-read after
+                # every slot(): a pending transfer swaps in a fresh pool
+                # array object)
+                raw: Dict[int, jnp.ndarray] = {}
+                for e in union:
+                    eslot = jnp.int32(self.cache.slot((l, e)))
+                    raw[e] = self._expert_raw(xn, *self.cache.pools,
+                                              eslot)  # f32 [B, d]
+                self.perf.decode_ffn_launches += len(union)
+                self.perf.decode_rows_launched += len(union) * B
                 stacked = jnp.stack([raw[e] for e in union])  # [U, B, d]
                 inv = np.zeros(self.E, np.int32)
                 for u, e in enumerate(union):
@@ -1155,6 +1186,7 @@ class BatchedServingEngine(EngineCore):
             r.trace.append(step_trace[b])
             r.pred.append(step_pred[b])
         self.queue.admission.model.observe_decode_step(t_tok - t0)
+        self.decode_step_wall.append(t_tok - t0)
         self.decode_batch_hist.append(B)
 
     # -- scheduler loop -----------------------------------------------------

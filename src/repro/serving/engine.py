@@ -29,6 +29,24 @@ jitted expert kernels read weights by slot index straight out of the pools.
 The engine records routing traces + cache events; the simulator replays them
 with hardware constants to produce the paper's latency/memory tables.
 
+Sparse grouped expert execution (ROADMAP item 3): both phases can run each
+layer's whole expert sweep as ONE launch instead of one launch per expert.
+``group_by_expert`` builds the dispatch host-side from the already-synced
+gate result: each distinct expert's selecting rows are gathered into a
+``[U, C, d]`` block (C bucketed to powers of two so the jitted kernel sees
+O(log B) shapes; padding rows repeat row 0 and are never read back), the
+per-expert ``cache.slot`` host syncs collapse into one vectorized slot pass,
+and the sweep runs as a single grouped einsum with numerics IDENTICAL per
+row to the dense ``expert_raw`` (same dtypes, same contraction) — or, under
+``REPRO_OPT_GROUPED_FFN``, as the Pallas ``expert_ffn_from_pool`` streaming
+kernel straight off the residency pools. Accumulation-order contract: the
+decode scatter-back walks j = 0..k-1 gathering every row's j-th choice from
+its group, so each row accumulates in its OWN top-k order; the fused prefill
+scatter-back adds per-expert contributions in PLAN order with gate weights
+folded in (non-selecting tokens contribute exact zeros, as in the dense
+path). Both disciplines are therefore bit-exact vs the per-expert loops at
+temperature 0 (tests/test_serving_batch.py, tests/test_perf_opts.py).
+
 The module is split into:
 
   * ``EngineCore`` — the shared execution substrate (host store, device
@@ -64,11 +82,95 @@ from repro.core.scheduler import (BaseScheduler, DuoServeScheduler,
                                   default_capacity, make_scheduler)
 from repro.core.state import StateConstructor
 from repro.core.tracer import ExpertsTracer, TraceStats
+from repro.kernels.expert_ffn import expert_ffn_from_pool
+from repro.kernels.ops import default_interpret
 from repro.models import layers as L
 from repro.models import moe_layer as M
+from repro.models import opt_flags
 from repro.models.layers import PDT
 from repro.models.model import attn_dims
 from repro.serving.api import Event, SamplingParams, TokenEvent
+
+
+@dataclasses.dataclass
+class PerfCounters:
+    """Measured expert-execution work, filled by the serving engines.
+
+    ``rows`` are (token, expert) FFN row evaluations — the unit expert-FLOP
+    cost scales with (6 * d_model * d_expert FLOPs per row, see
+    benchmarks/roofline.expert_flops_per_row). ``decode_rows_dense`` is what
+    the dense full-batch discipline costs (U distinct experts x all B rows
+    per layer — counted on BOTH paths, so a grouped engine reports the
+    redundancy it removed); ``decode_rows_grouped`` counts only each
+    expert's selecting rows (sum of per-expert group sizes);
+    ``decode_rows_launched`` is what the engine's FFN launches actually
+    computed (grouped: after Cmax bucketing, padding included; dense:
+    U * B). ``*_ffn_launches`` count expert-FFN kernel dispatches — the
+    fused prefill path must keep prefill_ffn_launches == prefill_moe_layers
+    (exactly one launch per layer visit)."""
+    decode_rows_dense: int = 0
+    decode_rows_grouped: int = 0
+    decode_rows_launched: int = 0
+    decode_ffn_launches: int = 0
+    decode_layers: int = 0
+    prefill_ffn_launches: int = 0
+    prefill_moe_layers: int = 0
+    max_prefill_launches_per_layer: int = 0
+
+
+def _bucket(n: int, cap: int) -> int:
+    """Next power of two >= n, clamped to cap — the padded group capacity.
+    Bucketing keeps the jitted grouped FFN at O(log cap) compiled shapes
+    instead of one compilation per distinct max-group-size."""
+    return min(1 << max(0, n - 1).bit_length(), cap)
+
+
+@dataclasses.dataclass
+class GroupedDispatch:
+    """Host-side segment-gather plan for one layer's expert sweep."""
+    row_idx: np.ndarray   # [U, C] int32 token index per expert (0-padded)
+    counts: List[int]     # per-expert selecting-row counts (<= C each)
+    u_of: np.ndarray      # [T, k] int32: group of each row's j-th choice
+    c_of: np.ndarray      # [T, k] int32: row's position inside that group
+    n_rows: int           # sum(counts) — real rows the sweep computes
+    n_launched: int       # U * C — rows launched after bucketing
+
+
+def group_by_expert(ids_np: np.ndarray, union: Sequence[int],
+                    bucket_cap: int) -> GroupedDispatch:
+    """Build the capacity-grouped dispatch for a [T, k] selection matrix.
+
+    ``union`` must cover every expert id appearing in ``ids_np`` (decode:
+    plan.hits + plan.misses; prefill: plan.order) and fixes the group
+    order. Rows are gathered per distinct expert in first-appearance order;
+    ``u_of``/``c_of`` invert the gather so scatter-back can walk each row's
+    own top-k choices (a row selecting the same expert under two choices
+    maps both to the one gathered copy)."""
+    T, k = ids_np.shape
+    einv = {int(e): u for u, e in enumerate(union)}
+    groups: List[List[int]] = [[] for _ in union]
+    u_of = np.zeros((T, k), np.int32)
+    c_of = np.zeros((T, k), np.int32)
+    pos: Dict[Tuple[int, int], int] = {}
+    for t in range(T):
+        for j in range(k):
+            u = einv[int(ids_np[t, j])]
+            c = pos.get((u, t))
+            if c is None:
+                g = groups[u]
+                c = len(g)
+                g.append(t)
+                pos[(u, t)] = c
+            u_of[t, j] = u
+            c_of[t, j] = c
+    counts = [len(g) for g in groups]
+    C = _bucket(max(counts), bucket_cap) if counts else 1
+    row_idx = np.zeros((max(len(union), 1), C), np.int32)
+    for u, g in enumerate(groups):
+        row_idx[u, : len(g)] = g
+    return GroupedDispatch(row_idx=row_idx, counts=counts, u_of=u_of,
+                           c_of=c_of, n_rows=sum(counts),
+                           n_launched=int(row_idx.size))
 
 
 @dataclasses.dataclass
@@ -97,7 +199,8 @@ class EngineCore:
                  stats: Optional[TraceStats] = None, predictor=None,
                  cache_capacity: Optional[int] = None,
                  temperature: float = 0.8, sample_seed: int = 0,
-                 sched_batch: int = 1, prefill_chunk: Optional[int] = None):
+                 sched_batch: int = 1, prefill_chunk: Optional[int] = None,
+                 fused_prefill: Optional[bool] = None):
         assert cfg.is_moe and cfg.family in ("moe", "dense"), \
             "engine schedules experts; use bundle.decode for non-MoE archs"
         assert cfg.n_dense_layers == 0, "engine assumes uniform MoE stack"
@@ -119,6 +222,13 @@ class EngineCore:
         }
         self.temperature = temperature
         self.prefill_chunk_size = prefill_chunk
+        # sparse grouped execution: fused_prefill=None defers to the
+        # REPRO_OPT_GROUPED_FFN opt flag, which also selects the Pallas
+        # pool-kernel backend for every grouped sweep (resolved once here)
+        self.fused_prefill = (opt_flags.grouped_ffn() if fused_prefill
+                              is None else bool(fused_prefill))
+        self._grouped_pallas = opt_flags.grouped_ffn()
+        self.perf = PerfCounters()
         self._rng = np.random.default_rng(sample_seed)
         # event sink: every generated token is emitted as a TokenEvent; the
         # front-ends (serve(), BatchedServingEngine.step()) assemble their
@@ -199,6 +309,25 @@ class EngineCore:
             return (h @ w2).astype(jnp.float32)
 
         @jax.jit
+        def grouped_raw(xn, row_idx, w1p, w3p, w2p, slots):
+            """Segment-gathered expert sweep in ONE launch: row_idx [U, C]
+            indexes each expert's selecting rows into the flattened tokens
+            (padding rows repeat row 0 — computed and never read back) and
+            slots [U] reads each expert's slab out of the residency pools.
+            Per-row numerics are IDENTICAL to expert_raw — same dtypes,
+            same contraction order, f32 cast after the down-projection —
+            so every gathered row is bit-equal to the dense full-batch
+            output for that (row, expert)."""
+            x2 = xn.reshape(-1, xn.shape[-1])
+            xg = x2[row_idx]                        # [U, C, d]
+            w1 = w1p[slots]
+            w3 = w3p[slots]
+            w2 = w2p[slots]
+            h = jax.nn.silu(jnp.einsum("ucd,udf->ucf", xg, w1)) \
+                * jnp.einsum("ucd,udf->ucf", xg, w3)
+            return jnp.einsum("ucf,ufd->ucd", h, w2).astype(jnp.float32)
+
+        @jax.jit
         def expert_apply(xn, w1p, w3p, w2p, slot, gate_w):
             return (expert_raw(xn, w1p, w3p, w2p, slot)
                     * gate_w[:, None]).astype(xn.dtype)
@@ -224,6 +353,7 @@ class EngineCore:
         self._attn_decode_batched = attn_decode_batched
         self._gate = gate
         self._expert_raw = expert_raw
+        self._grouped_raw = grouped_raw
         self._expert = expert_apply
         self._shared = shared_apply
         self._head = head
@@ -234,14 +364,47 @@ class EngineCore:
     def _moe_dev(self, l: int):
         return jax.tree.map(lambda a: a[l], self.dev["moe"])
 
-    def _run_experts_prefill(self, l, xn, w, ids, plan):
+    def _grouped_ffn_raw(self, l: int, union: Sequence[int], xn,
+                         row_idx: np.ndarray):
+        """ONE FFN launch for a whole layer's expert sweep, reading weights
+        by slot out of the residency pools. The per-expert host syncs of
+        the dense path collapse into one vectorized slot pass (single
+        host walk over the union, single int32 transfer); pools are read
+        AFTER the pass, so pending transfers' fresh array objects are
+        picked up. Backend: the engine grouped einsum (bit-exact vs
+        expert_raw) or, under REPRO_OPT_GROUPED_FFN, the Pallas
+        ``expert_ffn_from_pool`` streaming kernel. Returns f32 [U, C, d]."""
+        slots = np.fromiter((self.cache.slot((l, e)) for e in union),
+                            np.int32, count=len(union))
+        jslots = jnp.asarray(slots)
+        jrows = jnp.asarray(row_idx)
+        if self._grouped_pallas:
+            x2 = xn.reshape(-1, xn.shape[-1])
+            out = expert_ffn_from_pool(x2[jrows], *self.cache.pools, jslots,
+                                       interpret=default_interpret())
+            return out.astype(jnp.float32)
+        return self._grouped_raw(xn, jrows, *self.cache.pools, jslots)
+
+    def _run_experts_prefill(self, l, xn, w, ids, plan, ids_np=None):
         """Execute the PrefillPlan: grouped per-expert compute with the
         policy's fetch schedule. The plan already admitted its fetches into
         the shared ledger (slots reserved); `prefetch` here issues the
         actual host->device copies between compute dispatches, preserving
-        the two-stream overlap, and `slot` is the use-time sync point."""
+        the two-stream overlap, and `slot` is the use-time sync point.
+        With ``fused_prefill`` (and the gate's host-side ids available) the
+        per-expert sweep collapses into ONE grouped FFN launch instead —
+        same fetch schedule, same bits (see _run_experts_prefill_fused)."""
         acc = self._shared(self._moe_dev(l), xn)
         order = plan.order
+        if order:
+            self.perf.prefill_moe_layers += 1
+        if self.fused_prefill and order and ids_np is not None:
+            return self._run_experts_prefill_fused(l, xn, w, ids, plan,
+                                                   ids_np, acc)
+        if order:
+            self.perf.prefill_ffn_launches += len(order)
+            self.perf.max_prefill_launches_per_layer = max(
+                self.perf.max_prefill_launches_per_layer, len(order))
         # stage fetches according to the plan
         if plan.prefetch_all_first:
             for e in plan.fetches:
@@ -260,6 +423,46 @@ class EngineCore:
             acc = acc + self._expert(xn, *self.cache.pools, eslot, gate_w)
         return acc.reshape(xn.shape)
 
+    def _run_experts_prefill_fused(self, l, xn, w, ids, plan, ids_np, acc):
+        """Fused PrefillPlan execution: the per-expert sweep is ONE grouped
+        FFN launch off the residency pools. The plan's fetch schedule is
+        preserved verbatim — the same `prefetch` calls are issued in the
+        same order (all ahead of the single launch, the degenerate form of
+        "between compute dispatches"), then one vectorized slot pass is the
+        use-time sync point. Gate weights are folded in on scatter-back,
+        one expert at a time IN PLAN ORDER, so the accumulation order — and
+        with it every output bit — matches the unfused loop (non-selecting
+        tokens contribute exact zeros on both paths)."""
+        order = plan.order
+        if plan.prefetch_all_first:
+            for e in plan.fetches:
+                self.cache.prefetch((l, e))
+        elif plan.overlap_first:
+            self.cache.prefetch((l, order[0]))
+        for i, e in enumerate(order):
+            if not plan.prefetch_all_first:
+                if plan.pipelined and i + 1 < len(order):
+                    self.cache.prefetch((l, order[i + 1]))
+                elif not plan.pipelined:
+                    self.cache.prefetch((l, e))
+        disp = group_by_expert(ids_np, order, bucket_cap=ids_np.shape[0])
+        raw = self._grouped_ffn_raw(l, order, xn, disp.row_idx)  # [U, C, d]
+        self.perf.prefill_ffn_launches += 1
+        self.perf.max_prefill_launches_per_layer = max(
+            self.perf.max_prefill_launches_per_layer, 1)
+        T = ids_np.shape[0]
+        zeros = jnp.zeros((T, raw.shape[-1]), jnp.float32)
+        for u, e in enumerate(order):
+            gate_w = (w * (ids == e)).sum(-1).reshape(-1)
+            n = disp.counts[u]
+            if n:
+                rows = jnp.asarray(disp.row_idx[u, :n])
+                y = zeros.at[rows].set(raw[u, :n])
+            else:
+                y = zeros
+            acc = acc + (y * gate_w[:, None]).astype(acc.dtype)
+        return acc.reshape(xn.shape)
+
     def _prefill_moe(self, l: int, lp, x):
         """Shared per-layer MoE body of both prefill paths: gate, dispatch
         the policy's PrefillPlan, add the expert output, unpin the layer.
@@ -268,7 +471,8 @@ class EngineCore:
         ids_np = np.asarray(ids)  # sync: gate result needed by dispatcher
         act = sorted(set(int(e) for e in ids_np.ravel()))
         plan = self.sched.prefill_plan(l, act)
-        y = self._run_experts_prefill(l, xn, w, ids, plan)
+        y = self._run_experts_prefill(l, xn, w, ids, plan,
+                                      ids_np=ids_np.reshape(-1, self.k))
         x = x + y
         self.sched.end_layer(l)
         return x, ids_np.reshape(-1, self.k), act

@@ -54,6 +54,46 @@ def test_expert_ffn_from_pool_matches_direct():
                                   np.asarray(want, np.float32))
 
 
+def test_expert_ffn_from_pool_fused_prefill_parity():
+    """Fused-prefill shape regime: segment-gathered [U, Cmax, d] rows (rows
+    repeated across groups, zero-padded tails) through the pool kernel vs
+    the grouped-einsum oracle the engine's default backend uses."""
+    U, C, d, f, cap, T = 3, 8, 64, 128, 7, 16
+    ks = jax.random.split(jax.random.PRNGKey(9), 5)
+    xt = jax.random.normal(ks[0], (T, d), jnp.bfloat16)
+    w1p = jax.random.normal(ks[1], (cap, d, f), jnp.bfloat16) * 0.05
+    w3p = jax.random.normal(ks[2], (cap, d, f), jnp.bfloat16) * 0.05
+    w2p = jax.random.normal(ks[3], (cap, f, d), jnp.bfloat16) * 0.05
+    row_idx = jax.random.randint(ks[4], (U, C), 0, T)   # dup + padded rows
+    slots = [4, 0, 6]
+    xg = xt[row_idx]                                    # [U, C, d]
+    got = expert_ffn_from_pool(xg, w1p, w3p, w2p, slots, block_f=64,
+                               interpret=True)
+    sl = jnp.asarray(slots)
+    w1, w3, w2 = w1p[sl], w3p[sl], w2p[sl]
+    want = jnp.einsum(
+        "ucf,ufd->ucd",
+        jax.nn.silu(jnp.einsum("ucd,udf->ucf", xg, w1))
+        * jnp.einsum("ucd,udf->ucf", xg, w3), w2).astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want), **_tol(jnp.bfloat16))
+
+
+def test_expert_ffn_block_f_fallback():
+    """A block_f that does not divide d_expert degrades to the largest
+    dividing tile instead of asserting out (96 % 64 != 0 -> bf=48)."""
+    E, C, d, f = 2, 8, 32, 96
+    ks = jax.random.split(jax.random.PRNGKey(10), 4)
+    x = jax.random.normal(ks[0], (E, C, d), jnp.float32)
+    w1 = jax.random.normal(ks[1], (E, d, f), jnp.float32) * 0.05
+    w3 = jax.random.normal(ks[2], (E, d, f), jnp.float32) * 0.05
+    w2 = jax.random.normal(ks[3], (E, f, d), jnp.float32) * 0.05
+    got = expert_ffn(x, w1, w3, w2, block_f=64, interpret=True)
+    want = ref.expert_ffn_ref(x, w1, w3, w2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
 @pytest.mark.parametrize("B,H,Hkv,S,D,bq,bk", [
     (1, 2, 2, 64, 32, 32, 32),
     (2, 4, 2, 128, 64, 64, 32),    # GQA

@@ -136,6 +136,144 @@ def test_moe_dispatch_pallas_kernel_parity(monkeypatch):
                                atol=2e-3)
 
 
+# -- sparse grouped-expert execution (serving engines) ---------------------
+
+@pytest.fixture(scope="module")
+def moe_serving_setup():
+    from repro.models.model import build
+    cfg = reduced(get_config("mixtral_8x7b"))
+    bundle = build(cfg)
+    return cfg, bundle.init(jax.random.PRNGKey(0))
+
+
+def test_group_by_expert_patterns():
+    """Host-side dispatch construction: duplicate-expert rows (all rows the
+    same picks), fully disjoint picks, and Cmax bucketing."""
+    from repro.serving.engine import group_by_expert
+    # all rows pick the same two experts -> two maximal groups of size B
+    ids = np.tile(np.array([[2, 5]], np.int32), (4, 1))
+    d = group_by_expert(ids, [2, 5], bucket_cap=4)
+    assert d.counts == [4, 4] and d.n_rows == 8 and d.n_launched == 8
+    np.testing.assert_array_equal(d.row_idx, [[0, 1, 2, 3], [0, 1, 2, 3]])
+    np.testing.assert_array_equal(d.u_of, [[0, 1]] * 4)
+    np.testing.assert_array_equal(d.c_of, [[0, 0], [1, 1], [2, 2], [3, 3]])
+    # fully disjoint picks -> 2B singleton groups, bucketed capacity 1
+    ids = np.arange(8, dtype=np.int32).reshape(4, 2)
+    d = group_by_expert(ids, list(range(8)), bucket_cap=4)
+    assert d.counts == [1] * 8 and d.row_idx.shape == (8, 1)
+    assert d.n_rows == 8 and d.n_launched == 8
+    # mixed loads: Cmax=3 buckets up to 4 (power of two), padding rows 0
+    ids = np.array([[0, 1], [0, 2], [0, 1], [3, 1]], np.int32)
+    d = group_by_expert(ids, [0, 1, 2, 3], bucket_cap=4)
+    assert d.counts == [3, 3, 1, 1]
+    assert d.row_idx.shape == (4, 4) and d.n_rows == 8 and d.n_launched == 16
+    # scatter inversion: row t's j-th choice lands at (u_of, c_of)
+    for t in range(4):
+        for j in range(2):
+            u, c = d.u_of[t, j], d.c_of[t, j]
+            assert d.row_idx[u, c] == t and c < d.counts[u]
+
+
+def test_grouped_raw_bitexact_vs_dense(moe_serving_setup):
+    """The one-launch grouped einsum must reproduce the dense full-batch
+    expert_raw rows BIT-exactly (same dtypes, same per-row contraction) —
+    the invariant the grouped decode path's exactness rests on."""
+    from repro.serving.batching import BatchedServingEngine
+    from repro.serving.engine import group_by_expert
+    cfg, params = moe_serving_setup
+    eng = BatchedServingEngine(cfg, params, policy="duo", max_batch=4,
+                               max_seq=32, temperature=0.0)
+    B, d, de, cap = 4, cfg.d_model, cfg.d_expert, 6
+    ks = jax.random.split(jax.random.PRNGKey(7), 4)
+    xn = jax.random.normal(ks[0], (B, 1, d), jnp.bfloat16)
+    w1p = jax.random.normal(ks[1], (cap, d, de), jnp.bfloat16) * 0.05
+    w3p = jax.random.normal(ks[2], (cap, d, de), jnp.bfloat16) * 0.05
+    w2p = jax.random.normal(ks[3], (cap, de, d), jnp.bfloat16) * 0.05
+    ids = np.array([[0, 1], [0, 1], [2, 0], [1, 2]], np.int32)
+    union = [0, 1, 2]   # "expert" e lives in pool slot e here
+    disp = group_by_expert(ids, union, bucket_cap=B)
+    grouped = np.asarray(eng._grouped_raw(
+        xn, jnp.asarray(disp.row_idx), w1p, w3p, w2p,
+        jnp.asarray(union, jnp.int32)))
+    for u, e in enumerate(union):
+        dense = np.asarray(eng._expert_raw(xn, w1p, w3p, w2p, jnp.int32(e)))
+        for c in range(disp.counts[u]):
+            np.testing.assert_array_equal(
+                grouped[u, c], dense[disp.row_idx[u, c]],
+                err_msg=f"group {u} row {c} not bit-equal to dense")
+
+
+@pytest.mark.parametrize("chunk", [None, 3])
+def test_fused_prefill_bit_exact_single_launch(moe_serving_setup, chunk):
+    """fused_prefill=True: one grouped FFN launch per layer visit, tokens
+    and per-layer active-expert sets bit-identical to the per-expert
+    sweep — monolithic and chunked."""
+    from repro.serving.engine import MoEServingEngine
+    cfg, params = moe_serving_setup
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, cfg.vocab, size=13).astype(np.int32)
+    base = MoEServingEngine(cfg, params, policy="duo", temperature=0.0,
+                            prefill_chunk=chunk)
+    fused = MoEServingEngine(cfg, params, policy="duo", temperature=0.0,
+                             prefill_chunk=chunk, fused_prefill=True)
+    rb = base.serve(prompt, max_new=4)
+    rf = fused.serve(prompt, max_new=4)
+    np.testing.assert_array_equal(rf.tokens, rb.tokens)
+    assert rf.prefill_active == rb.prefill_active
+    assert fused.perf.prefill_ffn_launches == fused.perf.prefill_moe_layers
+    assert fused.perf.max_prefill_launches_per_layer == 1
+    assert base.perf.max_prefill_launches_per_layer > 1
+
+
+def test_grouped_ffn_pallas_backend_runs(monkeypatch, moe_serving_setup):
+    """REPRO_OPT_GROUPED_FFN=1 routes both grouped sweeps through the
+    Pallas pool kernel (interpret mode on CPU) and defaults fused prefill
+    on: the engine must run end to end with one FFN launch per decode
+    layer and per prefill layer under the expert-HBM bound. Numerics are
+    kernel-grade (f32 accumulation — pinned by the interpret parity tests
+    in test_kernels.py), so tokens are not compared bit-wise here."""
+    monkeypatch.setenv("REPRO_OPT_GROUPED_FFN", "1")
+    monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+    from repro.serving.batching import BatchedServingEngine
+    cfg, params = moe_serving_setup
+    eng = BatchedServingEngine(cfg, params, policy="duo", max_batch=2,
+                               max_seq=32, temperature=0.0, prefill_budget=4)
+    assert eng.fused_prefill and eng._grouped_pallas
+    rng = np.random.default_rng(5)
+    for n in (9, 12):
+        eng.submit(rng.integers(0, cfg.vocab, size=n).astype(np.int32),
+                   max_new=3)
+    finished = eng.run_until_drained()
+    assert len(finished) == 2
+    for r in finished:
+        toks = r.result().tokens
+        assert toks.shape == (4,) and np.isfinite(toks).all()
+    assert eng.perf.decode_ffn_launches == eng.perf.decode_layers
+    assert eng.perf.max_prefill_launches_per_layer == 1
+    assert eng.cache.hbm_bound_ok
+
+
+def test_decode_expert_flops_accounting():
+    """benchmarks/roofline sparse accounting: grouped = sum of per-expert
+    selecting-row counts, dense = distinct experts x full batch."""
+    import sys, os
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks.roofline import decode_expert_flops, expert_flops_per_row
+    cfg = _moe_cfg(E=8, k=2, d=32, de=16)
+    sel = np.array([[0, 1], [0, 1], [2, 0], [3, 4]], np.int32)
+    out = decode_expert_flops(cfg, sel)
+    # distinct = {0,1,2,3,4} -> dense 5*4 rows; selecting rows: e0 in 3
+    # rows, e1 in 2, e2/e3/e4 in 1 each -> 8 (== B*k, no within-row dups)
+    assert out["dense_rows"] == 20 and out["grouped_rows"] == 8
+    per = expert_flops_per_row(cfg)
+    assert out["dense_flops"] == 20 * per
+    assert out["grouped_flops"] == 8 * per
+    # duplicate-heavy batch: all rows same picks -> dense == grouped
+    sel = np.tile(np.array([[5, 6]], np.int32), (4, 1))
+    out = decode_expert_flops(cfg, sel)
+    assert out["dense_rows"] == out["grouped_rows"] == 8
+
+
 def test_ring_cache_wraparound_exact():
     """Windowed ring-buffer decode must equal full-cache windowed attention
     even after the ring wraps several times (slot reuse + masking)."""

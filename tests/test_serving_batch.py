@@ -585,6 +585,77 @@ def test_auto_budget_respects_request_tbt_slo(setup):
     np.testing.assert_array_equal(tight.result().tokens, refs[0].tokens[:3])
 
 
+# -- sparse grouped-expert decode/prefill exactness battery ----------------
+
+@pytest.mark.parametrize("B", [1, 2, 4, 8])
+@pytest.mark.parametrize("budget", [None, 4])
+def test_grouped_decode_exactness_battery(setup, B, budget):
+    """Segment-gathered decode + fused prefill are bit-exact vs BOTH the
+    dense full-batch discipline and the sequential reference, for every
+    batch width x {monolithic, chunked} prefill. Eight requests share B KV
+    slots, so every B < 8 exercises mid-flight admission; the request list
+    repeats each prompt, so rows with duplicate expert selections coexist
+    with divergent ones. The expert-HBM bound is asserted after EVERY
+    step on the grouped engine."""
+    from test_residency import assert_residency_invariants
+    cfg, params, prompts, refs = setup
+    reqs = prompts * 2
+
+    def drain(grouped):
+        eng = BatchedServingEngine(cfg, params, policy="duo", max_batch=B,
+                                   max_seq=32, temperature=0.0,
+                                   prefill_budget=budget,
+                                   grouped_decode=grouped,
+                                   fused_prefill=grouped)
+        for p in reqs:
+            eng.submit(p, max_new=MAX_NEW)
+        for _ in range(10_000):
+            eng.step()
+            assert_residency_invariants(eng.cache)
+            if eng.idle:
+                break
+        return eng, sorted(eng.finished, key=lambda r: r.rid)
+
+    grp_eng, grp = drain(True)
+    dense_eng, dense = drain(False)
+    assert len(grp) == len(dense) == len(reqs)
+    for i, (g, d) in enumerate(zip(grp, dense)):
+        np.testing.assert_array_equal(
+            g.result().tokens, refs[i % len(prompts)].tokens,
+            err_msg=f"request {i} diverged from sequential")
+        np.testing.assert_array_equal(g.result().tokens, d.result().tokens)
+        np.testing.assert_array_equal(g.result().decode_trace,
+                                      d.result().decode_trace)
+        assert g.result().prefill_active == d.result().prefill_active
+    # sparse discipline: one FFN launch per decode layer, and never more
+    # row evaluations than the dense path
+    assert grp_eng.perf.decode_ffn_launches == grp_eng.perf.decode_layers
+    assert grp_eng.perf.decode_rows_grouped <= grp_eng.perf.decode_rows_dense
+    assert dense_eng.perf.decode_rows_launched == \
+        dense_eng.perf.decode_rows_dense
+    if budget is not None:
+        assert grp_eng.perf.max_prefill_launches_per_layer == 1
+
+
+def test_grouped_decode_identical_rows(setup):
+    """Degenerate grouping: all rows are the SAME prompt, so every decode
+    step selects identical experts across the whole batch (one maximal
+    group per distinct expert, U == the row's own selection count) — the
+    grouped path must still match the sequential reference bit-exactly."""
+    cfg, params, prompts, refs = setup
+    eng = BatchedServingEngine(cfg, params, policy="duo", max_batch=4,
+                               max_seq=32, temperature=0.0)
+    for _ in range(4):
+        eng.submit(prompts[0], max_new=MAX_NEW)
+    finished = sorted(eng.run_until_drained(), key=lambda r: r.rid)
+    assert len(finished) == 4
+    for r in finished:
+        np.testing.assert_array_equal(r.result().tokens, refs[0].tokens)
+    # every step's groups cover all B rows per selected expert
+    assert eng.perf.decode_rows_grouped == \
+        eng.perf.decode_rows_dense
+
+
 def test_queue_sheds_breached_requests(setup):
     """A pessimistic cost model + tight deadline: the queue rejects instead
     of wasting a KV slot on an unmeetable request."""
