@@ -1,0 +1,16 @@
+"""Static-analysis suite guarding the serving stack's architectural
+invariants: an AST lint (sync, emit, residency, jit, recompile discipline)
+and a jaxpr auditor (host callbacks, captured constants, donation,
+compile-key enumeration).  Run as ``python -m repro.analysis``; see
+docs/INVARIANTS.md for the rule catalogue."""
+from .lint import AllowEntry, Finding, LintReport, load_allowlist, run_lint
+from .rules import ALL_RULES
+
+__all__ = [
+    "AllowEntry",
+    "Finding",
+    "LintReport",
+    "load_allowlist",
+    "run_lint",
+    "ALL_RULES",
+]

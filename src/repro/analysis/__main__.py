@@ -1,0 +1,99 @@
+"""CLI: ``python -m repro.analysis`` — exits nonzero on any finding.
+
+Layer 1 (always): AST lint of the repro package against the invariant
+rules, suppressed only via ``analysis/allowlist.toml``.
+Layer 2 (default, skip with ``--no-jaxpr``): trace every registered jitted
+kernel with abstract shapes and audit callbacks / captured constants /
+donation / compile-key counts.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from .lint import load_allowlist, run_lint
+from .rules import ALL_RULES
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    ap.add_argument(
+        "--root", type=Path, default=None,
+        help="package root to lint (default: the installed repro package)",
+    )
+    ap.add_argument(
+        "--allowlist", type=Path, default=None,
+        help="allowlist TOML (default: analysis/allowlist.toml in the root)",
+    )
+    ap.add_argument(
+        "--no-jaxpr", action="store_true",
+        help="skip the jaxpr audit layer (no jax import, pure AST lint)",
+    )
+    ap.add_argument(
+        "--list-rules", action="store_true", help="print rule ids and exit",
+    )
+    ap.add_argument(
+        "-v", "--verbose", action="store_true",
+        help="also print suppressed findings with their allowlist reasons",
+    )
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for rule in ALL_RULES:
+            print(f"{rule.id:<22} paths: {', '.join(rule.paths)}")
+        return 0
+
+    root = args.root
+    if root is None:
+        import repro
+
+        # repro may be a namespace package (__file__ is None)
+        root = Path(next(iter(repro.__path__)))
+    allow_path = args.allowlist or root / "analysis" / "allowlist.toml"
+    allowlist = load_allowlist(allow_path) if allow_path.exists() else []
+
+    report = run_lint(root, ALL_RULES, allowlist)
+    status = 0
+
+    for f in report.findings:
+        print(f.format())
+        status = 1
+    if args.verbose:
+        for f, entry in report.suppressed:
+            print(f"allowed  {f.format()}")
+            print(f"         reason: {entry.reason}")
+    for entry in report.unused_allows:
+        print(
+            f"warning: unused allowlist entry rule={entry.rule!r} "
+            f"path={entry.path!r} scope={entry.scope!r} call={entry.call!r} "
+            f"arg={entry.arg!r} — delete it or fix the pattern"
+        )
+
+    n_sup = len(report.suppressed)
+    print(
+        f"lint: {len(report.scanned)} files, {len(report.findings)} finding(s), "
+        f"{n_sup} allowlisted",
+        file=sys.stderr,
+    )
+
+    if not args.no_jaxpr:
+        from .jaxpr_audit import run_audit
+
+        audit = run_audit()
+        for f in audit.findings:
+            print(f.format())
+            status = 1
+        print(
+            f"jaxpr audit: {len(audit.kernels)} kernels, "
+            f"{audit.compile_keys} grouped-FFN compile keys "
+            f"(bound {audit.compile_key_bound}), "
+            f"{len(audit.findings)} finding(s)",
+            file=sys.stderr,
+        )
+
+    return status
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -30,7 +30,7 @@ import collections
 import dataclasses
 import functools
 import time
-from typing import Dict, Iterable, List, Optional, Set, Tuple
+from typing import Dict, Iterable, List, Set, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -34,7 +34,7 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
-from repro.core.cache import CacheState, ExpertKey
+from repro.core.cache import CacheState
 from repro.core.tracer import TraceStats
 
 

@@ -186,7 +186,6 @@ def simulate_prefill(sched: BaseScheduler, costs: ModelCosts, hw: HW,
             # DuoServe two-stream pipeline: fetch_0 overlaps attn; fetch_{i+1}
             # waits for its slot (compute_{i-1} done) — cache holds 2.
             comp_end = {}
-            prev_fetch = None
             for i, e in enumerate(plan.order):
                 deps = list(issue_dep) if i == 0 else [fetch_end[plan.order[i - 1]]]
                 if i >= 2:

@@ -13,7 +13,7 @@ tracer builds:
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List
 
 import numpy as np
 

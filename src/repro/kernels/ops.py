@@ -10,9 +10,6 @@ from __future__ import annotations
 
 import os
 
-import jax
-import jax.numpy as jnp
-
 from repro.kernels.expert_ffn import expert_ffn
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.flash_decode import flash_decode

@@ -26,10 +26,9 @@ import jax           # noqa: E402
 import numpy as np   # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
-from repro.configs.base import (ARCH_IDS, INPUT_SHAPES, get_config,  # noqa: E402
-                                pairs)
+from repro.configs.base import INPUT_SHAPES, get_config, pairs  # noqa: E402
 from repro.launch import partition  # noqa: E402
-from repro.launch.input_specs import input_specs, decode_abs, train_batch_abs  # noqa: E402
+from repro.launch.input_specs import decode_abs, train_batch_abs  # noqa: E402
 from repro.launch.mesh import make_production_mesh, mesh_info, n_chips  # noqa: E402
 from repro.models.model import build  # noqa: E402
 from repro.training.optimizer import AdamW, AdamWState  # noqa: E402

@@ -20,7 +20,6 @@ Used by the dry-run for §Roofline. Per-device numbers (HLO is post-SPMD).
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Dict, List, Optional, Tuple
 

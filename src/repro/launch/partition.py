@@ -8,10 +8,8 @@ query heads on a 16-way tensor axis).
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.models.moe_layer import expert_shard_mode

@@ -9,7 +9,6 @@ path proven by the dry-run).
       --requests 4 --policy duo
 """
 import argparse
-import os
 
 
 def main():
@@ -23,7 +22,6 @@ def main():
     args = ap.parse_args()
 
     import jax
-    import numpy as np
 
     from repro.configs.base import get_config, reduced
     from repro.core.predictor import train_predictor

@@ -12,7 +12,6 @@ on TPU the mesh maps onto real devices and nothing else changes).
 """
 import argparse
 import os
-import sys
 
 
 def main():
@@ -36,7 +35,6 @@ def main():
 
     import jax
     import jax.numpy as jnp
-    import numpy as np
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     from repro.configs.base import INPUT_SHAPES, get_config, reduced

@@ -22,8 +22,7 @@ audio enc-dec).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Dict, Optional
+from typing import Callable, Dict
 
 import jax
 import jax.numpy as jnp
@@ -237,7 +236,6 @@ def build_dense(cfg: ArchConfig, mesh_info=None) -> ModelBundle:
 
     def decode_step(params, step, cache):
         token = step["token"]
-        Bsz = token.shape[0]
         x = params["embed"].at[token].get(mode="clip")
         pos = cache["pos"]
         W = cache["k"].shape[2]

@@ -27,7 +27,6 @@ run one at a time from a small cache).
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

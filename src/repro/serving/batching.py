@@ -1140,7 +1140,8 @@ class BatchedServingEngine(EngineCore):
                 # slots resolved in one vectorized pass; the scatter-back
                 # walks j = 0..k-1 so every row still accumulates in its
                 # OWN top-k order — bit-identical to the dense path below
-                disp = group_by_expert(ids_np, union, bucket_cap=B)
+                disp = group_by_expert(ids_np, union, bucket_cap=B,
+                                       u_bucket_cap=min(self.E, B * self.k))
                 raw_g = self._grouped_ffn_raw(l, union, xn, disp.row_idx)
                 self.perf.decode_ffn_launches += 1
                 self.perf.decode_rows_grouped += disp.n_rows

@@ -99,6 +99,40 @@ from repro.serving.frontend import (CooperativeDriver, RequestHandle,
                                     ServingFrontend)
 
 
+def _valid_engine_kwargs() -> frozenset:
+    """Keyword names BatchedServingEngine accepts, derived from its real
+    signature (so this can never drift), plus the pool-level
+    ``default_ttft_slo`` knob resolved in build()."""
+    import inspect
+
+    sig = inspect.signature(BatchedServingEngine.__init__)
+    names = {p.name for p in sig.parameters.values()
+             if p.name not in ("self", "cfg", "params", "queue")}
+    return frozenset(names | {"default_ttft_slo"})
+
+
+def _validate_engine_kwargs(kwargs, where: str) -> None:
+    """Reject unknown engine kwargs/override keys up front with a clear
+    error (a typo'd override otherwise surfaces as a TypeError only after
+    earlier replicas were already built — or, worse, silently configures
+    nothing if a **kwargs sink is ever introduced)."""
+    valid = _valid_engine_kwargs()
+    unknown = sorted(set(kwargs) - valid)
+    if not unknown:
+        return
+    import difflib
+
+    parts = []
+    for u in unknown:
+        close = difflib.get_close_matches(u, sorted(valid), n=1)
+        parts.append(f"{u!r}" + (f" (did you mean {close[0]!r}?)"
+                                 if close else ""))
+    raise ValueError(
+        f"{where}: unknown engine kwarg(s) {', '.join(parts)}; "
+        f"valid keys: {sorted(valid)}"
+    )
+
+
 def likely_expert_keys(engine: BatchedServingEngine,
                        width: Optional[int] = None
                        ) -> FrozenSet[ExpertKey]:
@@ -395,12 +429,15 @@ class ReplicaPool:
         assert n_replicas is not None and n_replicas >= 1
         assert "queue" not in engine_kwargs, \
             "per-replica queues are built here; pass default_ttft_slo"
+        _validate_engine_kwargs(engine_kwargs, "ReplicaPool.build(**engine_kwargs)")
         engines = []
         for r in range(n_replicas):
             kw = dict(engine_kwargs)
             if overrides is not None and overrides[r]:
                 assert "queue" not in overrides[r], \
                     "per-replica queues are built here"
+                _validate_engine_kwargs(overrides[r],
+                                        f"ReplicaPool.build overrides[{r}]")
                 kw.update(overrides[r])
             slo = kw.pop("default_ttft_slo", default_ttft_slo)
             q = (RequestQueue(AdmissionController(default_ttft_slo=slo))

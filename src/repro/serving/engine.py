@@ -68,7 +68,6 @@ The module is split into:
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -78,7 +77,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.cache import ExpertResidency, HostExpertStore
-from repro.core.scheduler import (BaseScheduler, DuoServeScheduler,
+from repro.core.scheduler import (DuoServeScheduler,
                                   default_capacity, make_scheduler)
 from repro.core.state import StateConstructor
 from repro.core.tracer import ExpertsTracer, TraceStats
@@ -137,7 +136,8 @@ class GroupedDispatch:
 
 
 def group_by_expert(ids_np: np.ndarray, union: Sequence[int],
-                    bucket_cap: int) -> GroupedDispatch:
+                    bucket_cap: int,
+                    u_bucket_cap: Optional[int] = None) -> GroupedDispatch:
     """Build the capacity-grouped dispatch for a [T, k] selection matrix.
 
     ``union`` must cover every expert id appearing in ``ids_np`` (decode:
@@ -145,7 +145,16 @@ def group_by_expert(ids_np: np.ndarray, union: Sequence[int],
     order. Rows are gathered per distinct expert in first-appearance order;
     ``u_of``/``c_of`` invert the gather so scatter-back can walk each row's
     own top-k choices (a row selecting the same expert under two choices
-    maps both to the one gathered copy)."""
+    maps both to the one gathered copy).
+
+    ``u_bucket_cap`` additionally pads the GROUP dimension (distinct-expert
+    count U) to a power of two clamped to the cap, the same discipline as
+    the per-group capacity C: without it the jitted grouped sweep recompiles
+    once per distinct U value. Padding groups are all-zero rows (they gather
+    token 0, are computed, and are never scattered back — ``counts``,
+    ``u_of`` and ``c_of`` only cover real groups, so bit-exactness is
+    untouched). None keeps the exact U (callers that index groups
+    positionally, e.g. the raw-kernel tests, rely on that)."""
     T, k = ids_np.shape
     einv = {int(e): u for u, e in enumerate(union)}
     groups: List[List[int]] = [[] for _ in union]
@@ -165,7 +174,10 @@ def group_by_expert(ids_np: np.ndarray, union: Sequence[int],
             c_of[t, j] = c
     counts = [len(g) for g in groups]
     C = _bucket(max(counts), bucket_cap) if counts else 1
-    row_idx = np.zeros((max(len(union), 1), C), np.int32)
+    U_rows = max(len(union), 1)
+    if u_bucket_cap is not None:
+        U_rows = max(U_rows, _bucket(U_rows, u_bucket_cap))
+    row_idx = np.zeros((U_rows, C), np.int32)
     for u, g in enumerate(groups):
         row_idx[u, : len(g)] = g
     return GroupedDispatch(row_idx=row_idx, counts=counts, u_of=u_of,
@@ -376,6 +388,10 @@ class EngineCore:
         ``expert_ffn_from_pool`` streaming kernel. Returns f32 [U, C, d]."""
         slots = np.fromiter((self.cache.slot((l, e)) for e in union),
                             np.int32, count=len(union))
+        if row_idx.shape[0] > slots.size:
+            # U-bucketed dispatch: padding groups read slab 0 (always a
+            # valid slot) and their output is never scattered back
+            slots = np.pad(slots, (0, row_idx.shape[0] - slots.size))
         jslots = jnp.asarray(slots)
         jrows = jnp.asarray(row_idx)
         if self._grouped_pallas:
@@ -445,12 +461,13 @@ class EngineCore:
                     self.cache.prefetch((l, order[i + 1]))
                 elif not plan.pipelined:
                     self.cache.prefetch((l, e))
-        disp = group_by_expert(ids_np, order, bucket_cap=ids_np.shape[0])
+        T = ids_np.shape[0]
+        disp = group_by_expert(ids_np, order, bucket_cap=T,
+                               u_bucket_cap=min(self.E, T * self.k))
         raw = self._grouped_ffn_raw(l, order, xn, disp.row_idx)  # [U, C, d]
         self.perf.prefill_ffn_launches += 1
         self.perf.max_prefill_launches_per_layer = max(
             self.perf.max_prefill_launches_per_layer, 1)
-        T = ids_np.shape[0]
         zeros = jnp.zeros((T, raw.shape[-1]), jnp.float32)
         for u, e in enumerate(order):
             gate_w = (w * (ids == e)).sum(-1).reshape(-1)
@@ -679,11 +696,19 @@ class MoEServingEngine(EngineCore):
                                   rng)
             out.append(tok)
             n_dec = t + 1
-            self._emit(TokenEvent(rid=rid, token=tok, index=n_dec,
-                                  t=time.perf_counter()))
+            self._emit_token(rid, tok, n_dec)
             if tok in stop_ids:
                 break
         return (np.asarray(out[1:]), trace[:n_dec], pred_trace[:n_dec])
+
+    def _emit_token(self, rid: int, token: int, index: int, *,
+                    first: bool = False) -> None:
+        """The single-request engine's token sink (mirror of
+        BatchedServingEngine._emit_token): every streamed token funnels
+        through one place so cancellation/TBT accounting — and the
+        emit-discipline lint — hold engine-wide."""
+        self._emit(TokenEvent(rid=rid, token=token, index=index,
+                              t=time.perf_counter(), first=first))
 
     def serve(self, prompt: np.ndarray, max_new: int = 16, *,
               params: Optional[SamplingParams] = None) -> RequestResult:
@@ -709,8 +734,7 @@ class MoEServingEngine(EngineCore):
         logits, kv, active, _ = self.prefill_layers(prompt)
         first = self.sample_row(np.asarray(logits, np.float64)[0], temp, rng)
         t1 = time.perf_counter()
-        self._emit(TokenEvent(rid=rid, token=first, index=0, t=t1,
-                              first=True))
+        self._emit_token(rid, first, 0, first=True)
         if first in params.stop_token_ids:
             trace = np.zeros((0, self.L, self.k), np.int32)
             pred = np.full((0, self.L, self.k), -1, np.int32)

@@ -7,8 +7,6 @@ router load-balance aux for MoE archs.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
-
 import jax
 import jax.numpy as jnp
 

@@ -296,3 +296,78 @@ def test_ring_cache_wraparound_exact():
     got = np.stack([np.asarray(l, np.float32) for l in logits], 1)[0]
     want = np.asarray(full[0, 6:26], np.float32)
     np.testing.assert_allclose(got[:-1], want[:-1], rtol=6e-2, atol=6e-2)
+
+
+def test_group_by_expert_u_bucketing():
+    """u_bucket_cap pads the GROUP dimension to the next power of two
+    (clamped to the cap) without disturbing any real group's contents:
+    padding rows gather row 0 and are never scattered back (counts, u_of,
+    c_of cover only the real groups)."""
+    from repro.serving.engine import group_by_expert
+    ids = np.array([[0, 1], [0, 2], [0, 1], [2, 1]], np.int32)
+    union = [0, 1, 2]  # 3 distinct experts -> pads to 4 groups
+    exact = group_by_expert(ids, union, bucket_cap=4)
+    padded = group_by_expert(ids, union, bucket_cap=4, u_bucket_cap=8)
+    assert exact.row_idx.shape[0] == 3          # None keeps exact U
+    assert padded.row_idx.shape[0] == 4         # next pow2 >= 3
+    assert padded.counts == exact.counts        # real groups untouched
+    np.testing.assert_array_equal(padded.row_idx[:3], exact.row_idx)
+    np.testing.assert_array_equal(padded.u_of, exact.u_of)
+    np.testing.assert_array_equal(padded.c_of, exact.c_of)
+    np.testing.assert_array_equal(padded.row_idx[3], 0)  # pad gathers row 0
+    assert padded.n_rows == exact.n_rows        # accounting excludes pads
+    # cap clamps below the next power of two
+    clamped = group_by_expert(ids, union, bucket_cap=4, u_bucket_cap=3)
+    assert clamped.row_idx.shape[0] == 3
+
+
+def test_decode_recompile_bound_olog(moe_serving_setup):
+    """Serving sweep across B in {1..8} x naturally varying U: the grouped
+    decode FFN's distinct jit compilations stay within the enumerated
+    (B, U_pad, C) key set and the O(log B)*O(log U) bound — the recompile
+    discipline repro.analysis audits statically, asserted here against the
+    LIVE jit cache-miss counter."""
+    from repro.analysis.jaxpr_audit import (compile_key_bound,
+                                            enumerate_grouped_keys)
+    from repro.serving.batching import BatchedServingEngine
+    cfg, params = moe_serving_setup
+    MB = 8
+    eng = BatchedServingEngine(cfg, params, policy="duo", max_batch=MB,
+                               max_seq=48, temperature=0.0,
+                               fused_prefill=False)
+    orig = eng._grouped_raw
+    sigs = []
+
+    def spy(xn, jrows, *pools_and_slots):
+        sigs.append((tuple(xn.shape), tuple(jrows.shape)))
+        return orig(xn, jrows, *pools_and_slots)
+
+    eng._grouped_raw = spy
+    rng = np.random.default_rng(3)
+    for b in range(MB):
+        prompt = rng.integers(0, cfg.vocab, size=4 + b).astype(np.int32)
+        eng.submit(prompt, max_new=b + 1)   # distinct lifetimes: B walks
+    eng.run_until_drained()                 # 8 -> 1 as requests retire
+    eng._grouped_raw = orig
+
+    assert sigs, "grouped decode path never ran"
+    keys = set()
+    for (B, one, _d), (u_pad, c) in sigs:
+        assert one == 1, "non-decode launch leaked through _grouped_raw"
+        keys.add((B, u_pad, c))
+    seen_B = {key[0] for key in keys}
+    assert seen_B == set(range(1, MB + 1)), f"sweep missed batch sizes: {seen_B}"
+    # every observed key is one the static auditor enumerates, and the
+    # distinct-count respects the paper-claim bound
+    legal = enumerate_grouped_keys(MB, eng.E, eng.k)
+    assert keys <= legal, f"stray compile keys: {sorted(keys - legal)}"
+    bound = compile_key_bound(MB, eng.E, eng.k)
+    assert len(keys) <= bound
+    # pow2-or-clamp discipline on the padded dims
+    for B, u_pad, c in keys:
+        ucap = min(eng.E, B * eng.k)
+        assert u_pad == ucap or (u_pad & (u_pad - 1)) == 0
+        assert c == B or (c & (c - 1)) == 0
+    # the LIVE cache-miss counter: one compilation per distinct signature
+    if hasattr(orig, "_cache_size"):
+        assert orig._cache_size() == len(set(sigs)) <= bound
