@@ -53,10 +53,14 @@ import jax
 import numpy as np
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
-from benchmarks.common import ARRIVALS, arrival_offsets  # noqa: E402
+from benchmarks.common import (ARRIVALS, arrival_offsets,  # noqa: E402
+                               emit_bench_json)
 
 from repro.configs.base import get_config, reduced  # noqa: E402
 from repro.core.qos import percentile_report  # noqa: E402
+from repro.core.scheduler import default_capacity  # noqa: E402
+from repro.obs import (validate_metrics_snapshot, validate_trace,  # noqa: E402
+                       write_trace)
 from repro.serving.api import (GenerationRequest,  # noqa: E402
                                SamplingParams, TokenEvent)
 from repro.serving.batching import (BatchedServingEngine,  # noqa: E402
@@ -122,12 +126,15 @@ def run_cluster(cfg, params, prompts, *, n_replicas: int, router: str,
                 rate: float, arrival: str, max_new: int, max_batch: int,
                 policy: str, prefill_budget, ttft_slo, tbt_slo,
                 autopilot: bool, seed: int = 0, warm: bool = True,
-                overrides=None, preempt: bool = False) -> dict:
+                overrides=None, preempt: bool = False, spans: bool = False,
+                pool_sink=None) -> dict:
     pool = ReplicaPool.build(
         cfg, params, n_replicas, policy=policy, max_batch=max_batch,
         max_seq=max(len(p) for p in prompts) + max_new + 2,
         prefill_budget=prefill_budget, tbt_slo=tbt_slo, temperature=0.0,
-        overrides=overrides)
+        overrides=overrides, spans=spans)
+    if pool_sink is not None:
+        pool_sink.append(pool)
     if warm:
         warm_pool(pool, prompts)
     fe = ClusterFrontend(pool, router=router)
@@ -279,6 +286,37 @@ def disagg_parity_check(cfg, params, prompts, *, max_new: int,
           f"{pool.handoff_bytes} host KV bytes moved)")
 
 
+def check_disagg_trace(trace: dict) -> None:
+    """The --trace-out acceptance criteria on a disagg run's Perfetto
+    export: prefill-chunk / batched-decode / expert-prefetch spans land on
+    DISTINCT lanes (tids) across the replica tracks, and at least one
+    handoff flow pair links a source track to a different destination
+    track (the arrow Perfetto draws for the prefill->decode hop)."""
+    errs = validate_trace(trace)
+    assert not errs, f"trace failed schema validation: {errs[:5]}"
+    lane_tids = {}      # cat -> set of (pid, tid)
+    for ev in trace["traceEvents"]:
+        if ev["ph"] in ("X", "i") and ev.get("cat") in ("prefill", "decode",
+                                                        "prefetch"):
+            lane_tids.setdefault(ev["cat"], set()).add((ev["pid"], ev["tid"]))
+    missing = {"prefill", "decode", "prefetch"} - set(lane_tids)
+    assert not missing, f"no spans on lane(s) {sorted(missing)}"
+    tids = {cat: {t for _, t in pts} for cat, pts in lane_tids.items()}
+    assert tids["prefill"].isdisjoint(tids["decode"]) \
+        and tids["decode"].isdisjoint(tids["prefetch"]), \
+        f"lanes share a tid: {tids}"
+    flows = {}          # id -> {ph: pid}
+    for ev in trace["traceEvents"]:
+        if ev["ph"] in ("s", "f"):
+            flows.setdefault(ev["id"], {})[ev["ph"]] = ev["pid"]
+    linked = [fid for fid, d in flows.items()
+              if "s" in d and "f" in d and d["s"] != d["f"]]
+    assert linked, "no handoff flow links two distinct replica tracks"
+    print(f"  trace OK: {len(trace['traceEvents'])} events, "
+          f"{len(linked)} cross-replica handoff flow(s), "
+          "prefill/decode/prefetch on distinct lanes")
+
+
 def run_disagg_sweep(cfg, params, prompts, args, budget) -> None:
     """--disagg mode: per replica count N, symmetric pool (least_loaded)
     vs every prefill:decode split under the disagg router; asserts the
@@ -293,6 +331,8 @@ def run_disagg_sweep(cfg, params, prompts, args, budget) -> None:
           f"{'hoffs':>5s} {'hoff_p99':>9s} {'hoff_MB':>8s} "
           f"{'paused_KB':>9s} {'hbm':>4s}")
     records = []
+    want_obs = args.trace_out is not None or args.metrics_out is not None
+    obs_pools = []      # first disagg-router pool, spans enabled
     for n_rep in [int(r) for r in args.replicas.split(",")]:
         if n_rep < 2:
             print(f"{n_rep:4d}    (skip: disagg needs >= 2 replicas)")
@@ -303,14 +343,32 @@ def run_disagg_sweep(cfg, params, prompts, args, budget) -> None:
                          [{"role": "prefill"}] * p
                          + [{"role": "decode"}] * (n_rep - p)))
         for split, router, overrides in runs:
+            capture = want_obs and router == "disagg" and not obs_pools
+            ov = overrides
+            if capture and ov is not None:
+                # Tiny smoke grids fit every (layer, expert) inside the
+                # policy-default capacity, which silences the prefetch
+                # stream entirely (everything is resident after the first
+                # pass). Cap the captured decode replicas just below the
+                # full grid so the timeline shows the dual-phase
+                # prefetch/correction traffic it exists to visualise.
+                grid = cfg.n_layers * cfg.n_experts
+                cap = default_capacity(args.policy, cfg.n_layers,
+                                       cfg.n_experts, cfg.top_k,
+                                       batch=args.max_batch)
+                if cap >= grid:
+                    ov = [dict(o, cache_capacity=max(cfg.n_experts,
+                                                     grid - 2))
+                          if o.get("role") == "decode" else o for o in ov]
             rec = run_cluster(
                 cfg, params, prompts, n_replicas=n_rep, router=router,
                 rate=args.rate, arrival=args.arrival, max_new=args.max_new,
                 max_batch=args.max_batch, policy=args.policy,
                 prefill_budget=budget, ttft_slo=args.ttft_slo,
-                tbt_slo=args.tbt_slo, overrides=overrides,
+                tbt_slo=args.tbt_slo, overrides=ov,
                 autopilot=args.autopilot or args.smoke,
-                preempt=args.autopilot)
+                preempt=args.autopilot, spans=capture,
+                pool_sink=obs_pools if capture else None)
             rec["split"] = split
             records.append(rec)
             hbm_ok = all(h["ok"] for h in rec["per_replica_hbm"])
@@ -329,7 +387,33 @@ def run_disagg_sweep(cfg, params, prompts, args, budget) -> None:
                 assert rec["handoffs"] >= rec["completed"], \
                     "a completed request never took the prefill->decode hop"
 
+    if obs_pools:
+        pool = obs_pools[0]
+        for p in (args.trace_out, args.metrics_out):
+            if p and os.path.dirname(p):
+                os.makedirs(os.path.dirname(p), exist_ok=True)
+        if args.trace_out:
+            trace = write_trace(args.trace_out, pool.recorders())
+            print(f"wrote {args.trace_out} "
+                  f"({len(trace['traceEvents'])} events)")
+            check_disagg_trace(trace)
+        if args.metrics_out:
+            snap = pool.metrics_snapshot()
+            errs = validate_metrics_snapshot(snap)
+            assert not errs, f"metrics snapshot invalid: {errs[:5]}"
+            with open(args.metrics_out, "w") as f:
+                json.dump(snap, f, indent=1, sort_keys=True)
+            print(f"wrote {args.metrics_out}")
+
     if args.smoke:
+        d = next(r for r in records if r["router"] == "disagg")
+        emit_bench_json("cluster_disagg", {
+            "offered": d["offered"], "completed": d["completed"],
+            "handoffs": d["handoffs"],
+            "handoff_kv_bytes": d["handoff_kv_bytes"],
+            "ttft_p99_s": d["ttft"]["p99"], "tpot_p99_s": d["tpot"]["p99"],
+            "tokens_per_s": d["tokens_per_s"], "wall_s": d["wall_s"],
+        })
         print("\nbench_cluster --disagg smoke OK: 1p+1d bit-exact vs plain "
               "frontend; every completed request took the handoff; "
               "per-role expert HBM bounded")
@@ -370,6 +454,13 @@ def main():
                          "per-replica expert-HBM bound, and an SLO/"
                          "affinity-router win over round_robin")
     ap.add_argument("--out", default=None)
+    ap.add_argument("--trace-out", default=None,
+                    help="(--disagg) write a Perfetto JSON timeline of the "
+                         "first disagg run (spans on) and assert the "
+                         "prefill/decode/prefetch lanes + handoff flows")
+    ap.add_argument("--metrics-out", default=None,
+                    help="(--disagg) dump the captured pool's "
+                         "cluster+replica metrics snapshot as JSON")
     args = ap.parse_args()
 
     if args.smoke:
@@ -432,6 +523,13 @@ def main():
         assert any(wins), (
             "neither slo_headroom nor expert_affinity beat round_robin on "
             f"p99 TTFT or SLO attainment: {json.dumps(records, indent=1)}")
+        emit_bench_json("cluster", {
+            name: {"completed": by[(2, name)]["completed"],
+                   "ttft_p99_s": by[(2, name)]["ttft"]["p99"],
+                   "slo_attainment": by[(2, name)].get(
+                       "slo_attainment", float("nan")),
+                   "tokens_per_s": by[(2, name)]["tokens_per_s"]}
+            for name in ("round_robin", "slo_headroom", "expert_affinity")})
         print("\nbench_cluster smoke OK: QoS-aware routing beats "
               "round_robin under bursty arrivals; per-replica expert HBM "
               "bounded; 1-replica cluster bit-exact")

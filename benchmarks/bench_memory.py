@@ -13,7 +13,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import POLICIES, build_artifacts, replay
+from benchmarks.common import (POLICIES, build_artifacts, emit_bench_json,
+                               replay)
 from repro.configs.paper_models import PAPER_MODELS, QUANT_BYTES
 from repro.core.simulator import ModelCosts
 
@@ -74,6 +75,7 @@ def smoke() -> None:
               f"/{res.capacity} {'OK' if ok else 'VIOLATED'}")
         assert ok, f"{tag}: expert-HBM bound violated"
 
+    record = {}
     for pol in ("odf", "lfp", "mif", "duo"):
         eng = MoEServingEngine(cfg, params, policy=pol, stats=stats,
                                temperature=0.0)
@@ -88,6 +90,11 @@ def smoke() -> None:
             beng.submit(p, max_new=2)
         beng.run_until_drained()
         check(f"batched-chunked/{pol}", beng.cache)
+        record[pol] = {"expert_hbm_bytes": int(beng.cache.device_bytes),
+                       "bound_bytes": int(beng.cache.capacity
+                                          * beng.cache.bytes_per_expert),
+                       "regrow_events": int(beng.cache.regrow_events)}
+    emit_bench_json("memory", record)
     print("bench_memory smoke OK: expert HBM bounded by "
           "capacity x bytes_per_expert for every policy and path")
 

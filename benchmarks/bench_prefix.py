@@ -44,7 +44,8 @@ import jax
 import numpy as np
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
-from benchmarks.common import ARRIVALS, arrival_offsets  # noqa: E402
+from benchmarks.common import (ARRIVALS, arrival_offsets,  # noqa: E402
+                               emit_bench_json)
 from benchmarks.bench_cluster import hbm_report  # noqa: E402
 
 from repro.configs.base import get_config, reduced  # noqa: E402
@@ -319,6 +320,14 @@ def main():
         assert pa["ttft"]["p99"] < rr["ttft"]["p99"], \
             (f"prefix_affinity p99 TTFT {pa['ttft']['p99']:.3f}s did not "
              f"beat round_robin {rr['ttft']['p99']:.3f}s")
+        emit_bench_json("prefix", {
+            "warm_hit_fraction": warm["hit_fraction"],
+            "warm_prefilled_tokens": warm["prefilled_tokens"],
+            "cold_prefilled_tokens": cold["prefilled_tokens"],
+            "round_robin_ttft_p99_s": rr["ttft"]["p99"],
+            "prefix_affinity_ttft_p99_s": pa["ttft"]["p99"],
+            "tail_handoff_bytes_saved": tail["handoff_kv_bytes_saved"],
+        })
         print("\nbench_prefix smoke OK: warm==cold bit-exact; hit fraction "
               f"{warm['hit_fraction']:.2f}; prefix_affinity p99 "
               f"{pa['ttft']['p99']:.3f}s < round_robin "

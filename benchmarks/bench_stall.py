@@ -40,11 +40,15 @@ tiny workload and exits nonzero if the bound is ever exceeded (CI).
 import argparse
 import json
 import os
+import sys
 
 import jax
 import numpy as np
 
-from repro.configs.base import get_config, reduced
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+from benchmarks.common import emit_bench_json  # noqa: E402
+
+from repro.configs.base import get_config, reduced  # noqa: E402
 from repro.core.qos import TBTLedger, percentile_report
 from repro.models.model import build
 from repro.serving.batching import BatchedServingEngine
@@ -207,6 +211,14 @@ def main():
         # tests/test_serving_batch.py::test_chunked_interleaving_is_stall_free)
         assert ok, "expert-HBM bound violated"
         assert all(r["n_gaps"] > 0 for r in records), "no gaps measured"
+        emit_bench_json("stall", {
+            r["mode"].replace("/", "_"): {
+                "gap_p50_ms": r["decoder_gap"]["p50"] * 1e3,
+                "gap_max_ms": r["decoder_gap"]["max"] * 1e3,
+                "n_gaps": r["n_gaps"],
+                "long_ttft_p99_s": r["long_ttft_tail"]["p99"],
+                "straggler_ttft_s": r["straggler_ttft"],
+            } for r in records})
         print("bench_stall smoke OK")
         return
 

@@ -18,6 +18,7 @@ compared under non-stationary load, not just stationary Poisson.
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
 import pickle
 import time
@@ -43,6 +44,55 @@ RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
 POLICIES = ("odf", "lfp", "mif", "duo", "duo+")
 DATASETS = ("squad", "orca")
 ARRIVALS = ("poisson", "bursty", "ramp")
+
+# -- machine-readable bench records (PR 10) --------------------------------
+# Every bench --smoke run writes results/BENCH_<name>.json through
+# emit_bench_json so CI diffs runs without scraping stdout.
+BENCH_SCHEMA = "repro.bench/1"
+
+
+def validate_bench_record(obj) -> List[str]:
+    """Schema check for a BENCH_<name>.json record: ``{"schema":
+    BENCH_SCHEMA, "name": str, "metrics": {...}}`` with numeric (or
+    string-annotation) leaves under ``metrics`` — the same leaf rules as a
+    repro.obs metrics snapshot. Returns error strings; empty == valid."""
+    from repro.obs.metrics import METRICS_SCHEMA, validate_metrics_snapshot
+
+    if not isinstance(obj, dict):
+        return [f"bench record must be a dict, got {type(obj).__name__}"]
+    errs: List[str] = []
+    if obj.get("schema") != BENCH_SCHEMA:
+        errs.append(f"schema must be {BENCH_SCHEMA!r}, got {obj.get('schema')!r}")
+    if not isinstance(obj.get("name"), str) or not obj.get("name"):
+        errs.append("name must be a non-empty string")
+    metrics = obj.get("metrics")
+    if not isinstance(metrics, dict):
+        errs.append("metrics must be a dict")
+    else:
+        # reuse the metrics-snapshot leaf rules (numbers, no inf/bool/None)
+        errs += validate_metrics_snapshot(
+            {"schema": METRICS_SCHEMA, "metrics": metrics})
+    extra = set(obj) - {"schema", "name", "metrics"}
+    if extra:
+        errs.append(f"unknown keys {sorted(extra)}")
+    return errs
+
+
+def emit_bench_json(name: str, metrics: Dict[str, object]) -> str:
+    """Write the schema-validated ``results/BENCH_<name>.json`` record and
+    return its path. Raises on a record that fails validate_bench_record —
+    a bench emitting NaN-free numbers is part of its contract."""
+    rec = {"schema": BENCH_SCHEMA, "name": name, "metrics": metrics}
+    errs = validate_bench_record(rec)
+    if errs:
+        raise ValueError(
+            f"bench record {name!r} invalid: " + "; ".join(errs[:5]))
+    root = os.path.abspath(os.path.join(RESULTS, ".."))
+    os.makedirs(root, exist_ok=True)
+    path = os.path.join(root, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2, sort_keys=True)
+    return path
 
 
 def arrival_offsets(kind: str, rate: float, n: int,

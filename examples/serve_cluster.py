@@ -58,6 +58,9 @@ def main():
                     help="tiny fast run for CI: asserts 1-replica parity "
                          "vs the plain front-end, the per-replica expert-"
                          "HBM bound, and a deterministic autopilot shed")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Perfetto/chrome://tracing JSON timeline "
+                         "of the disagg demo (open at ui.perfetto.dev)")
     args = ap.parse_args()
     if args.smoke:
         args.requests, args.max_new = 4, 3
@@ -149,7 +152,7 @@ def main():
     # handle follows the request across the hop and the tokens match the
     # plain front-end bit for bit.
     dpool = ReplicaPool.build(
-        cfg, params,
+        cfg, params, spans=args.trace_out is not None,
         overrides=[{"role": "prefill"}, {"role": "decode"}], **kw)
     dfe = ClusterFrontend(dpool, router="disagg")
     dhs = [dfe.submit(GenerationRequest(
@@ -162,6 +165,11 @@ def main():
     print(f"disagg 1p+1d: {dpool.n_handoffs} prefill->decode handoffs "
           f"({dpool.handoff_bytes / 2**10:.1f} KiB host KV moved), "
           f"tokens bit-exact vs plain front-end")
+    if args.trace_out:
+        from repro.obs import write_trace
+        trace = write_trace(args.trace_out, dpool.recorders())
+        print(f"wrote {args.trace_out} ({len(trace['traceEvents'])} events) "
+              "- open at https://ui.perfetto.dev")
 
     # [drain] elasticity: take a replica out of service MID-FLIGHT — its
     # queued/prefilling/running requests migrate to the survivors via the

@@ -105,7 +105,7 @@ SERVING_JIT_FILES: Tuple[str, ...] = (
 JIT_MUTABLE_SELF: Set[str] = {
     "cache", "sched", "store", "perf", "prefix", "queue", "dev",
     "running", "prefilling", "_K", "_V", "_slot_pos", "_events", "_pools",
-    "_free_slots", "_arrivals",
+    "_free_slots", "_arrivals", "metrics", "obs",
 }
 
 # --- recompile-hazard -----------------------------------------------------
@@ -121,6 +121,48 @@ REGISTERED_JIT_CALLEES: Set[str] = {
 # Helpers whose results are *sanctioned* shape sources: power-of-two
 # bucketing keeps the distinct-shape count logarithmic.
 BUCKETING_HELPERS: Set[str] = {"_bucket", "group_by_expert", "vocab_pad_of"}
+
+# --- obs-discipline -------------------------------------------------------
+# (a) Aggregates migrated onto the repro.obs metrics registry (PR 10).
+# The old attribute names survive as read-only registry views; a direct
+# write bypasses the registry and silently forks the bookkeeping.
+MIGRATED_METRICS: Set[str] = {
+    # BatchedServingEngine
+    "prefilled_tokens",
+    # ReplicaPool
+    "n_handoffs", "n_migrated", "handoff_bytes", "handoff_bytes_saved",
+    "n_tail_handoffs",
+    # QosAutopilot
+    "n_shed", "by_reason", "n_preempted", "n_resumed",
+}
+# (b) Span lifecycle discipline: SpanRecorder mutators may be called only
+# at the declared request-lifecycle / engine-phase points below, so the
+# span taxonomy stays small enough to read as a timeline.  Read-only
+# recorder views (spans(), terminal_reasons(), ...) are fine anywhere.
+SPAN_METHODS: Set[str] = {"begin", "end", "instant", "terminal"}
+SPAN_SCOPES: Dict[str, Tuple[str, ...]] = {
+    "serving/engine.py": (
+        "MoEServingEngine.decode",
+    ),
+    "serving/batching.py": (
+        "BatchedServingEngine.submit_request",
+        "BatchedServingEngine._admit_and_prefill",
+        "BatchedServingEngine._run_prefill_chunk",
+        "BatchedServingEngine._decode_step",
+        "BatchedServingEngine.cancel",
+        "BatchedServingEngine._retire",
+        "BatchedServingEngine.snapshot",
+        "BatchedServingEngine.restore",
+    ),
+    "serving/cluster.py": (
+        "ReplicaPool.migrate",
+        "QosAutopilot.scan",
+        "QosAutopilot._scan_preempt",
+    ),
+    "serving/frontend.py": (
+        "CooperativeDriver._cancel_paused",
+    ),
+}
 
 
 # ==========================================================================
@@ -500,10 +542,99 @@ class RecompileHazardRule(Rule):
         return False
 
 
+class ObsDisciplineRule(Rule):
+    """Two disciplines from the observability layer (PR 10):
+
+    (a) metrics migrated onto the registry are mutated ONLY through their
+        registry instruments — writes to the legacy attribute names (now
+        read-only views) or to ``*.perf.<field>`` fork the bookkeeping;
+    (b) ``SpanRecorder`` mutators (``*.obs.begin/end/instant/terminal``)
+        are called only at the lifecycle points declared in SPAN_SCOPES.
+    """
+
+    id = "obs-discipline"
+    paths = ("serving/*.py", "core/*.py")
+
+    def check(self, mod: ModuleInfo) -> Iterable[Finding]:
+        yield from self._check_metric_writes(mod)
+        yield from self._check_span_sites(mod)
+
+    def _check_metric_writes(self, mod: ModuleInfo) -> Iterable[Finding]:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Assign):
+                targets: List[ast.AST] = list(node.targets)
+            elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+                targets = [node.target]
+            else:
+                continue
+            scope = mod.scope(node)
+            for t in targets:
+                for root in _iter_target_roots(t):
+                    while isinstance(root, (ast.Subscript, ast.Starred)):
+                        root = root.value
+                    if not isinstance(root, ast.Attribute):
+                        continue
+                    owner = root.value
+                    owner_attr = (owner.attr
+                                  if isinstance(owner, ast.Attribute) else None)
+                    if root.attr in MIGRATED_METRICS:
+                        yield Finding(
+                            rule=self.id, path=mod.relpath, line=node.lineno,
+                            scope=scope, call=root.attr,
+                            arg=ast.unparse(t) if hasattr(ast, "unparse") else "",
+                            message=(
+                                f"write to `{root.attr}`, a metric migrated "
+                                "to the repro.obs registry (the attribute is "
+                                "a read-only view); mutate the registry "
+                                "instrument instead"
+                            ),
+                        )
+                    elif owner_attr == "perf":
+                        yield Finding(
+                            rule=self.id, path=mod.relpath, line=node.lineno,
+                            scope=scope, call=f"perf.{root.attr}",
+                            arg=ast.unparse(t) if hasattr(ast, "unparse") else "",
+                            message=(
+                                f"direct write to PerfCounters field "
+                                f"`{root.attr}`; mutate via "
+                                "perf.inc()/perf.max_update() so the registry "
+                                "stays the single source of truth"
+                            ),
+                        )
+
+    def _check_span_sites(self, mod: ModuleInfo) -> Iterable[Finding]:
+        patterns: Tuple[str, ...] = ()
+        for glob, pats in SPAN_SCOPES.items():
+            if fnmatch.fnmatch(mod.relpath, glob):
+                patterns = patterns + pats
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            if not (isinstance(fn, ast.Attribute) and fn.attr in SPAN_METHODS):
+                continue
+            recv = fn.value
+            if not (isinstance(recv, ast.Attribute) and recv.attr == "obs"):
+                continue
+            scope = mod.scope(node)
+            if _scope_matches(scope, patterns):
+                continue
+            yield Finding(
+                rule=self.id, path=mod.relpath, line=node.lineno,
+                scope=scope, call=f"obs.{fn.attr}", arg=first_arg_src(node),
+                message=(
+                    f"span recorder `{fn.attr}()` outside the declared "
+                    "lifecycle scopes (rules.SPAN_SCOPES); spans open/close "
+                    "only at declared request-lifecycle / engine-phase points"
+                ),
+            )
+
+
 ALL_RULES: Tuple[Rule, ...] = (
     SyncPointRule(),
     EmitDisciplineRule(),
     ResidencyDisciplineRule(),
     JitHygieneRule(),
     RecompileHazardRule(),
+    ObsDisciplineRule(),
 )

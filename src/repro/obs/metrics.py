@@ -1,0 +1,267 @@
+"""Typed metric registry — the single home for every number the stack tracks.
+
+Three instrument kinds, all label-aware:
+
+  * :class:`Counter`   — monotonically increasing float (``inc``).
+  * :class:`Gauge`     — point-in-time value: pushed (``set`` /
+    ``max_update``) or *pulled* through a zero-arg callback evaluated at
+    read time (``fn=``), which is how derived quantities (TBT sketch
+    percentiles, residency hit counts, paused KV bytes) surface without
+    double bookkeeping.
+  * :class:`Histogram` — count/sum/min/max plus streaming P² quantile
+    sketches (reusing :class:`repro.core.qos.P2Quantile`).
+
+A registry hands out instruments keyed by ``(name, sorted(labels))`` —
+asking twice returns the same object, so hot paths hold pre-bound handles
+and never do a dict lookup per event. ``snapshot()`` returns a plain dict
+(JSON-ready) and ``exposition()`` renders Prometheus text format. No
+external dependencies; everything is hand-rolled on stdlib.
+
+Legacy attributes elsewhere in the stack (``PerfCounters`` fields,
+``BatchedServingEngine.prefilled_tokens``, ``ReplicaPool.handoff_bytes``,
+``QosAutopilot.by_reason``, ...) are thin read-only views over registry
+instruments; the ``obs-discipline`` lint in ``repro.analysis`` rejects
+direct writes to them.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.core.qos import P2Quantile
+
+Number = Union[int, float]
+
+# Snapshot schema identifier, embedded by dump helpers and checked by
+# validate_metrics_snapshot on the CI artifacts.
+METRICS_SCHEMA = "repro.obs.metrics/1"
+
+
+def _label_key(labels: Dict[str, str]) -> Tuple[Tuple[str, str], ...]:
+    return tuple(sorted((str(k), str(v)) for k, v in labels.items()))
+
+
+def _label_str(key: Tuple[Tuple[str, str], ...]) -> str:
+    if not key:
+        return ""
+    return "{" + ",".join(f'{k}="{v}"' for k, v in key) + "}"
+
+
+class Counter:
+    """Monotonic counter. ``inc`` only; negative increments are a bug."""
+
+    __slots__ = ("name", "labels", "_v")
+
+    def __init__(self, name: str, labels: Tuple[Tuple[str, str], ...] = ()):
+        self.name = name
+        self.labels = labels
+        self._v = 0.0
+
+    def inc(self, n: Number = 1) -> None:
+        if n < 0:
+            raise ValueError(f"counter {self.name} cannot decrease (inc {n})")
+        self._v += n
+
+    @property
+    def value(self) -> float:
+        return self._v
+
+
+class Gauge:
+    """Point-in-time value; pushed via ``set``/``max_update`` or pulled
+    through ``fn`` (a zero-arg callable evaluated at every read)."""
+
+    __slots__ = ("name", "labels", "_v", "fn")
+
+    def __init__(self, name: str, labels: Tuple[Tuple[str, str], ...] = (),
+                 fn: Optional[Callable[[], Number]] = None):
+        self.name = name
+        self.labels = labels
+        self._v = 0.0
+        self.fn = fn
+
+    def set(self, v: Number) -> None:
+        if self.fn is not None:
+            raise ValueError(f"gauge {self.name} is pull-mode (fn=); cannot set")
+        self._v = float(v)
+
+    def max_update(self, v: Number) -> None:
+        if self.fn is not None:
+            raise ValueError(f"gauge {self.name} is pull-mode (fn=); cannot set")
+        if v > self._v:
+            self._v = float(v)
+
+    @property
+    def value(self) -> float:
+        if self.fn is not None:
+            return float(self.fn())
+        return self._v
+
+
+class Histogram:
+    """count/sum/min/max plus P² streaming quantile sketches."""
+
+    __slots__ = ("name", "labels", "qs", "count", "sum", "min", "max", "_sketch")
+
+    def __init__(self, name: str, labels: Tuple[Tuple[str, str], ...] = (),
+                 qs: Sequence[int] = (50, 99)):
+        self.name = name
+        self.labels = labels
+        self.qs = tuple(qs)
+        self.count = 0
+        self.sum = 0.0
+        self.min = math.inf
+        self.max = -math.inf
+        self._sketch = {q: P2Quantile(q / 100.0) for q in self.qs}
+
+    def observe(self, x: Number) -> None:
+        x = float(x)
+        self.count += 1
+        self.sum += x
+        if x < self.min:
+            self.min = x
+        if x > self.max:
+            self.max = x
+        for sk in self._sketch.values():
+            sk.update(x)
+
+    def quantile(self, q: int) -> float:
+        return float(self.sketch_value(q))
+
+    def sketch_value(self, q: int) -> float:
+        v = self._sketch[q].value()
+        return float(v) if v is not None else float("nan")
+
+    def summary(self) -> Dict[str, float]:
+        out: Dict[str, float] = {"count": float(self.count), "sum": self.sum}
+        if self.count:
+            out["min"] = self.min
+            out["max"] = self.max
+            for q in self.qs:
+                out[f"p{q}"] = self.sketch_value(q)
+        return out
+
+
+class MetricsRegistry:
+    """Get-or-create instrument factory plus snapshot/exposition."""
+
+    def __init__(self) -> None:
+        # name -> (kind, help); instruments keyed by (name, label_key).
+        self._meta: Dict[str, Tuple[str, str]] = {}
+        self._instruments: Dict[Tuple[str, Tuple[Tuple[str, str], ...]],
+                                Union[Counter, Gauge, Histogram]] = {}
+
+    # -- factories ---------------------------------------------------------
+    def _get(self, kind: str, name: str, help: str, key, build):
+        meta = self._meta.get(name)
+        if meta is None:
+            self._meta[name] = (kind, help)
+        elif meta[0] != kind:
+            raise ValueError(
+                f"metric {name} already registered as {meta[0]}, not {kind}")
+        inst = self._instruments.get((name, key))
+        if inst is None:
+            inst = build()
+            self._instruments[(name, key)] = inst
+        return inst
+
+    def counter(self, name: str, help: str = "", **labels: str) -> Counter:
+        key = _label_key(labels)
+        return self._get("counter", name, help, key, lambda: Counter(name, key))
+
+    def gauge(self, name: str, help: str = "",
+              fn: Optional[Callable[[], Number]] = None, **labels: str) -> Gauge:
+        key = _label_key(labels)
+        g = self._get("gauge", name, help, key, lambda: Gauge(name, key, fn))
+        if fn is not None and g.fn is None:
+            g.fn = fn
+        return g
+
+    def histogram(self, name: str, help: str = "", qs: Sequence[int] = (50, 99),
+                  **labels: str) -> Histogram:
+        key = _label_key(labels)
+        return self._get("histogram", name, help, key,
+                         lambda: Histogram(name, key, qs))
+
+    # -- views -------------------------------------------------------------
+    def names(self) -> List[str]:
+        return sorted(self._meta)
+
+    def series(self, name: str):
+        """All instruments registered under ``name`` (one per label set)."""
+        return [inst for (n, _), inst in sorted(self._instruments.items())
+                if n == name]
+
+    def snapshot(self) -> Dict[str, Union[float, Dict[str, float]]]:
+        """Flat dict: ``name{label="v"}`` -> value (hist -> summary dict)."""
+        out: Dict[str, Union[float, Dict[str, float]]] = {}
+        for (name, key), inst in sorted(self._instruments.items()):
+            full = name + _label_str(key)
+            if isinstance(inst, Histogram):
+                out[full] = inst.summary()
+            else:
+                out[full] = inst.value
+        return out
+
+    def exposition(self) -> str:
+        """Prometheus text exposition (histograms as summaries)."""
+        lines: List[str] = []
+        for name in self.names():
+            kind, help = self._meta[name]
+            if help:
+                lines.append(f"# HELP {name} {help}")
+            lines.append(f"# TYPE {name} {'summary' if kind == 'histogram' else kind}")
+            for inst in self.series(name):
+                ls = _label_str(inst.labels)
+                if isinstance(inst, Histogram):
+                    for q in inst.qs:
+                        qk = list(inst.labels) + [("quantile", f"{q / 100.0:g}")]
+                        v = inst.sketch_value(q)
+                        lines.append(f"{name}{_label_str(tuple(qk))} {_fmt(v)}")
+                    lines.append(f"{name}_sum{ls} {_fmt(inst.sum)}")
+                    lines.append(f"{name}_count{ls} {inst.count}")
+                else:
+                    lines.append(f"{name}{ls} {_fmt(inst.value)}")
+        return "\n".join(lines) + "\n"
+
+
+def _fmt(v: float) -> str:
+    if v != v:  # NaN
+        return "NaN"
+    if v == int(v) and abs(v) < 1e15:
+        return str(int(v))
+    return repr(v)
+
+
+def validate_metrics_snapshot(obj) -> List[str]:
+    """Schema check for a dumped metrics snapshot (possibly nested:
+    ``{"schema": ..., "cluster": {...}, "replicas": [{...}, ...]}``).
+    Returns a list of error strings; empty means valid."""
+    errs: List[str] = []
+
+    def leaves(prefix: str, v) -> None:
+        if isinstance(v, dict):
+            for k, sub in v.items():
+                if not isinstance(k, str):
+                    errs.append(f"{prefix}: non-string key {k!r}")
+                else:
+                    leaves(f"{prefix}.{k}" if prefix else k, sub)
+        elif isinstance(v, list):
+            for i, sub in enumerate(v):
+                leaves(f"{prefix}[{i}]", sub)
+        elif isinstance(v, bool) or v is None:
+            errs.append(f"{prefix}: metric value must be a number, got {v!r}")
+        elif isinstance(v, (int, float)):
+            if isinstance(v, float) and math.isinf(v):
+                errs.append(f"{prefix}: non-finite value {v!r}")
+        elif isinstance(v, str):
+            pass  # schema tag / annotations
+        else:
+            errs.append(f"{prefix}: unsupported type {type(v).__name__}")
+
+    if not isinstance(obj, dict):
+        return [f"snapshot must be a dict, got {type(obj).__name__}"]
+    if obj.get("schema") != METRICS_SCHEMA:
+        errs.append(f"schema must be {METRICS_SCHEMA!r}, got {obj.get('schema')!r}")
+    leaves("", obj)
+    return errs

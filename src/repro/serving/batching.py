@@ -81,6 +81,7 @@ from repro.core.qos import (Admission, AdmissionController, ReplicaLoad,
                             TBTLedger)
 from repro.core.scheduler import DuoServeScheduler
 from repro.models.layers import PDT
+from repro.obs.spans import SpanRecorder, monotonic
 from repro.serving.api import (FinishEvent, GenerationRequest, RejectEvent,
                                RequestSnapshot, SamplingParams, StepEvents,
                                TokenEvent)
@@ -179,6 +180,15 @@ def kv_row_bytes(engine: "BatchedServingEngine") -> int:
     tail-only snapshot skips shipping the shared head."""
     return int(2 * engine.L * engine.cfg.n_kv_heads * engine.cfg.hd
                * np.dtype(PDT).itemsize)
+
+
+def _nan_to_zero(fn):
+    """Wrap a pull-gauge callback so an empty sketch's NaN reads as 0.0
+    (a JSON metrics snapshot must stay finite)."""
+    def g() -> float:
+        v = float(fn())
+        return v if v == v else 0.0
+    return g
 
 
 def parse_prefill_budget(v: Union[int, str, None]) -> Union[int, str, None]:
@@ -321,7 +331,8 @@ class BatchedServingEngine(EngineCore):
                  grouped_decode: bool = True,
                  fused_prefill: Optional[bool] = None,
                  stats=None, predictor=None, cache_capacity=None,
-                 temperature: float = 0.0, sample_seed: int = 0):
+                 temperature: float = 0.0, sample_seed: int = 0,
+                 spans: Union[bool, SpanRecorder] = False):
         super().__init__(cfg, params, policy, stats=stats,
                          predictor=predictor, cache_capacity=cache_capacity,
                          temperature=temperature, sample_seed=sample_seed,
@@ -329,7 +340,7 @@ class BatchedServingEngine(EngineCore):
                          prefill_chunk=(prefill_budget
                                         if isinstance(prefill_budget, int)
                                         else None),
-                         fused_prefill=fused_prefill)
+                         fused_prefill=fused_prefill, spans=spans)
         # grouped_decode=True (default): the batched decode expert sweep is
         # segment-gathered — each distinct expert computes only its
         # selecting rows, one FFN launch per layer (bit-exact vs the dense
@@ -373,11 +384,28 @@ class BatchedServingEngine(EngineCore):
         self.cancelled: Deque[Request] = collections.deque(
             maxlen=finished_window)
         self.tbt = TBTLedger(window=tbt_window)
+        # TBT aggregates as PULL gauges off the one ledger (NaN-safe: the
+        # sketches report nan until their first gap, which a JSON snapshot
+        # must not carry)
+        for q, sk in self.tbt.sketches.items():
+            self.metrics.gauge(f"tbt_gap_seconds_p{int(q)}_stream",
+                               "streaming P2 inter-token-gap percentile",
+                               fn=_nan_to_zero(sk.value))
+        self.metrics.gauge("tbt_gap_seconds_max",
+                           "lifetime maximum inter-token gap",
+                           fn=self.tbt.max_gap)
+        self.metrics.gauge("tbt_gaps_total",
+                           "inter-token gaps observed (lifetime)",
+                           fn=lambda: self.tbt.total_gaps)
+        self._h_step = self.metrics.histogram(
+            "decode_step_seconds", "batched decode step wall time")
         # cross-request prefix/KV reuse (core/prefix.py); prefilled_tokens
         # counts prompt tokens that actually ran through prefill kernels —
         # with hits it is strictly less than the sum of prompt lengths
         self.prefix = PrefixTree() if prefix_cache else None
-        self.prefilled_tokens = 0
+        self._c_prefilled = self.metrics.counter(
+            "engine_prefilled_tokens_total",
+            "prompt tokens run through prefill kernels")
         self._next_rid = 0
         self._pf_rr = 0   # round-robin rotation cursor across steps
         self.step_count = 0
@@ -396,6 +424,12 @@ class BatchedServingEngine(EngineCore):
         so a driver must keep polling until they move."""
         return not (self.running or self.prefilling or self.held
                     or len(self.queue))
+
+    @property
+    def prefilled_tokens(self) -> int:
+        """Thin view over the registry counter (obs-discipline: mutation
+        happens only through ``self._c_prefilled.inc``)."""
+        return int(self._c_prefilled.value)
 
     def _current_budget(self) -> Optional[int]:
         """Resolve this step's prefill token budget. Auto mode consults the
@@ -446,6 +480,8 @@ class BatchedServingEngine(EngineCore):
         assert need <= self.W, f"request needs {need} slots > W={self.W}"
         self._next_rid += 1
         self.queue.submit(req)
+        self.obs.instant("request.queued", rid=req.rid,
+                         prompt_len=req.prompt_len)
         return req
 
     def submit(self, prompt: np.ndarray,
@@ -509,6 +545,7 @@ class BatchedServingEngine(EngineCore):
         req.active_sets = None
         self.tbt.close(req.rid)
         self.cancelled.append(req)
+        self.obs.terminal(req.rid, reason, n_tokens=len(req.tokens))
         self._emit(FinishEvent(rid=req.rid, reason=reason,
                                n_tokens=len(req.tokens), t=req.t_done))
         return True
@@ -776,9 +813,14 @@ class BatchedServingEngine(EngineCore):
             tbt_gaps=list(self.tbt.by_rid.get(req.rid, ())),
             rng_state=(req.rng.bit_generator.state
                        if req.rng is not None else None),
-            source_rid=req.rid, t_snapshot=time.perf_counter(),
+            # the obs monotonic clock — the SAME source the destination
+            # stamps t_restore with (serving/frontend.py), so handoff
+            # latency can never go negative under wall-clock adjustment
+            source_rid=req.rid, t_snapshot=monotonic(),
             kv_start=kv_start)
         self.tbt.close(req.rid)
+        self.obs.instant("request.paused", rid=req.rid,
+                         kv_bytes=snap.kv_bytes, state=state)
         req.state = "paused"
         req.slot = -1
         req.pf_k = req.pf_v = req.pf_sp = None
@@ -839,6 +881,8 @@ class BatchedServingEngine(EngineCore):
         if snap.state == "queued":
             req.state = "queued"
             self.queue.submit(req)
+            self.obs.instant("request.restored", rid=req.rid,
+                             source_rid=snap.source_rid, state="queued")
             return req
         # tail-only snapshot: rebuild the shared head [0, kv_start) from
         # THIS engine's prefix tree. Match (and pin) the head path BEFORE
@@ -896,6 +940,8 @@ class BatchedServingEngine(EngineCore):
         if head:
             self.prefix.release(req.prompt, head)   # head rows are copied
         self.tbt.reopen(req.rid, snap.tbt_gaps)
+        self.obs.instant("request.restored", rid=req.rid,
+                         source_rid=snap.source_rid, state=req.state)
         return req
 
     # -- prefill phase ------------------------------------------------------
@@ -918,10 +964,12 @@ class BatchedServingEngine(EngineCore):
             chunk_adaptive=self.prefill_budget == "auto",
             hit_fn=(self._prefix_peek if self.prefix is not None else None))
         for r in self.queue.rejected[n_rej:]:
+            self.obs.terminal(r.rid, "rejected", reason_detail="slo")
             self._emit(RejectEvent(rid=r.rid, reason="slo",
                                    t=time.perf_counter()))
         for req in newly:
             req.t_start = now
+            self.obs.instant("request.admitted", rid=req.rid)
             # longest cached prefix (capped at S-1): match pins the path
             # only while its rows are copied into fresh carry buffers —
             # once seeded, the pin drops so _acquire_slot below may evict
@@ -947,6 +995,8 @@ class BatchedServingEngine(EngineCore):
             req.state = "running"
             t0 = time.perf_counter()
             S = req.prompt_len
+            pt = self.obs.begin("prefill", lane="prefill", rid=req.rid,
+                                tokens=S - n_hit)
             if n_hit:
                 # monolithic engine with a hit: run the un-hit suffix as
                 # ONE whole chunk over the seeded carry buffers — the
@@ -968,12 +1018,13 @@ class BatchedServingEngine(EngineCore):
             self._slot_pos[slot, :S] = np.arange(S, dtype=np.int32)
             req.prefill_pos = S
             req.prefill_active = active
-            self.prefilled_tokens += S - n_hit
+            self._c_prefilled.inc(S - n_hit)
             self._prefix_insert(req)
             tok = self._sample_req(req, logits[0])
             self._emit_token(req, tok, time.perf_counter(), first=True)
             self.queue.admission.model.observe_prefill(S - n_hit,
                                                        req.t_first - t0)
+            self.obs.end(pt)
             self._finish_prefill(req)
         return newly
 
@@ -1004,6 +1055,8 @@ class BatchedServingEngine(EngineCore):
         slot, start = req.slot, req.prefill_pos
         stop = start + C
         final = stop == req.prompt_len
+        pt = self.obs.begin("prefill.chunk", lane="prefill", rid=req.rid,
+                            start=start, tokens=C)
         logits, req.pf_k, req.pf_v, req.pf_sp, act, _ = \
             self.prefill_chunk(req.prompt[None, start:stop], start,
                                req.pf_k, req.pf_v, req.pf_sp,
@@ -1011,11 +1064,13 @@ class BatchedServingEngine(EngineCore):
         for l in range(self.L):
             req.active_sets[l].update(act[l])
         req.prefill_pos = stop
-        self.prefilled_tokens += C
+        self._c_prefilled.inc(C)
         self.queue.admission.model.observe_prefill(
             C, time.perf_counter() - t0)
         if final:
             # one scatter into the slot pool for the whole prompt
+            self.obs.instant("kv.scatter", lane="prefill", rid=req.rid,
+                             rows=req.prompt_len)
             for l in range(self.L):
                 self._K[l] = self._K[l].at[slot].set(req.pf_k[l][0])
                 self._V[l] = self._V[l].at[slot].set(req.pf_v[l][0])
@@ -1028,6 +1083,7 @@ class BatchedServingEngine(EngineCore):
             self._emit_token(req, tok, time.perf_counter(), first=True)
             self.prefilling.remove(req)
             self._finish_prefill(req)
+        self.obs.end(pt, final=final)
 
     def _prefill_work(self) -> int:
         """Spend up to this step's prefill budget advancing 'prefilling'
@@ -1089,6 +1145,7 @@ class BatchedServingEngine(EngineCore):
         """
         B = len(batch)
         t0 = time.perf_counter()
+        dt = self.obs.begin("decode.step", lane="decode", batch=B)
         idx = np.asarray([r.slot for r in batch], np.int32)
         toks = np.asarray([[r.tokens[-1]] for r in batch], np.int32)
         pos_np = np.asarray([r.pos for r in batch], np.int32)
@@ -1114,6 +1171,7 @@ class BatchedServingEngine(EngineCore):
                                                   pos)
             self._K[l] = self._K[l].at[jidx].set(ck)
             self._V[l] = self._V[l].at[jidx].set(cv)
+            self.obs.instant("kv.scatter", lane="decode", layer=l, rows=B)
             xn, w, ids = self._gate(self._moe_dev(l), lp, x)
             ids_np = np.asarray(ids).reshape(B, self.k)
             step_trace[:, l] = ids_np
@@ -1124,15 +1182,19 @@ class BatchedServingEngine(EngineCore):
             np_pred = plan.predicted[: self.k]
             step_pred[:, l, : len(np_pred)] = np_pred
             # correction fetches for misses (sync point #1), once per expert
-            for e in plan.misses:
-                self.cache.prefetch((l, e))
-                self.cache.wait((l, e))
+            if plan.misses:
+                ct = self.obs.begin("prefetch.correction", lane="prefetch",
+                                    layer=l, n=len(plan.misses))
+                for e in plan.misses:
+                    self.cache.prefetch((l, e))
+                    self.cache.wait((l, e))
+                self.obs.end(ct)
             hit_set, miss_set = set(plan.hits), set(plan.misses)
             for b, r in enumerate(batch):
                 r.hits += len(set(selections[b]) & hit_set)
                 r.misses += len(set(selections[b]) & miss_set)
-            self.perf.decode_layers += 1
-            self.perf.decode_rows_dense += len(union) * B
+            self.perf.inc("decode_layers")
+            self.perf.inc("decode_rows_dense", len(union) * B)
             acc = self._shared(self._moe_dev(l), xn)
             if union and self.grouped_decode:
                 # segment-gathered sweep: ONE launch computes only each
@@ -1143,9 +1205,11 @@ class BatchedServingEngine(EngineCore):
                 disp = group_by_expert(ids_np, union, bucket_cap=B,
                                        u_bucket_cap=min(self.E, B * self.k))
                 raw_g = self._grouped_ffn_raw(l, union, xn, disp.row_idx)
-                self.perf.decode_ffn_launches += 1
-                self.perf.decode_rows_grouped += disp.n_rows
-                self.perf.decode_rows_launched += disp.n_launched
+                self.obs.instant("ffn.launch", lane="decode", layer=l,
+                                 rows=disp.n_launched)
+                self.perf.inc("decode_ffn_launches")
+                self.perf.inc("decode_rows_grouped", disp.n_rows)
+                self.perf.inc("decode_rows_launched", disp.n_launched)
                 for j in range(self.k):
                     y = raw_g[jnp.asarray(disp.u_of[:, j]),
                               jnp.asarray(disp.c_of[:, j])]  # f32 [B, d]
@@ -1161,8 +1225,10 @@ class BatchedServingEngine(EngineCore):
                     eslot = jnp.int32(self.cache.slot((l, e)))
                     raw[e] = self._expert_raw(xn, *self.cache.pools,
                                               eslot)  # f32 [B, d]
-                self.perf.decode_ffn_launches += len(union)
-                self.perf.decode_rows_launched += len(union) * B
+                self.obs.instant("ffn.launch", lane="decode", layer=l,
+                                 rows=len(union) * B, launches=len(union))
+                self.perf.inc("decode_ffn_launches", len(union))
+                self.perf.inc("decode_rows_launched", len(union) * B)
                 stacked = jnp.stack([raw[e] for e in union])  # [U, B, d]
                 inv = np.zeros(self.E, np.int32)
                 for u, e in enumerate(union):
@@ -1173,6 +1239,9 @@ class BatchedServingEngine(EngineCore):
                     acc = acc + (y * w[:, j, None]).astype(acc.dtype)
             x = x + acc.reshape(x.shape)
             # prediction stream: prefetch layer l+1's experts for the batch
+            if plan.prefetch_next:
+                self.obs.instant("prefetch.dispatch", lane="prefetch",
+                                 layer=l, n=len(plan.prefetch_next))
             for e in plan.prefetch_next:
                 self.cache.prefetch((l + 1, e))
         # unpin the successor-less last layer (see MoEServingEngine.decode):
@@ -1189,6 +1258,8 @@ class BatchedServingEngine(EngineCore):
         self.queue.admission.model.observe_decode_step(t_tok - t0)
         self.decode_step_wall.append(t_tok - t0)
         self.decode_batch_hist.append(B)
+        self._h_step.observe(t_tok - t0)
+        self.obs.end(dt, batch=B)
 
     # -- scheduler loop -----------------------------------------------------
     def step(self, now: Optional[float] = None) -> StepEvents:
@@ -1226,6 +1297,7 @@ class BatchedServingEngine(EngineCore):
         self._release_slot(r)
         self.finished.append(r)
         self.tbt.close(r.rid)
+        self.obs.terminal(r.rid, r.finish_reason, n_tokens=len(r.tokens))
         self._emit(FinishEvent(rid=r.rid, reason=r.finish_reason,
                                n_tokens=len(r.tokens), t=r.t_done))
         return True

@@ -91,6 +91,7 @@ import numpy as np
 
 from repro.core.cache import ExpertKey
 from repro.core.qos import AdmissionController, ReplicaLoad
+from repro.obs.metrics import METRICS_SCHEMA, MetricsRegistry
 from repro.serving.api import (GenerationRequest, RejectEvent,
                                RequestSnapshot, StepEvents, as_request_spec)
 from repro.serving.batching import (BatchedServingEngine, Request,
@@ -399,12 +400,57 @@ class ReplicaPool:
         self.roles: List[str] = [getattr(e, "role", "both")
                                  for e in self.engines]
         self.draining: set = set()   # replica indices being drained
-        self.n_handoffs = 0          # prefill->decode KV handoffs completed
-        self.n_migrated = 0          # drain migrations completed
-        self.handoff_bytes = 0       # host-side KV bytes moved by migrate()
-        self.handoff_bytes_saved = 0  # head bytes NOT shipped (prefix reuse)
-        self.n_tail_handoffs = 0     # migrations that shipped a partial tail
+        # pool-level accounting lives on this registry (per-replica numbers
+        # live on each engine's own ``metrics``); the n_handoffs /
+        # handoff_bytes / ... attributes below are read-only views
+        self.metrics = MetricsRegistry()
+        self._c_handoffs = self.metrics.counter(
+            "cluster_handoffs_total",
+            "prefill->decode KV handoffs completed")
+        self._c_migrated = self.metrics.counter(
+            "cluster_migrations_total", "drain migrations completed")
+        self._c_handoff_bytes = self.metrics.counter(
+            "cluster_handoff_bytes_total",
+            "host-side KV bytes moved by migrate()")
+        self._c_handoff_saved = self.metrics.counter(
+            "cluster_handoff_bytes_saved_total",
+            "head bytes NOT shipped thanks to destination prefix reuse")
+        self._c_tail_handoffs = self.metrics.counter(
+            "cluster_tail_handoffs_total",
+            "migrations that shipped only a partial KV tail")
+        # stamp each engine's span recorder with its replica index so a
+        # merged Perfetto export gets one process-track per replica
+        for i, e in enumerate(self.engines):
+            e.obs.replica = i
+        self._flow_seq = 0   # Perfetto flow-arrow ids for handoff hops
         self._likely_cache: Optional[FrozenSet[ExpertKey]] = None
+
+    # legacy counter attributes — thin read-only registry views (the
+    # obs-discipline lint rejects direct writes; mutate via the counters)
+    @property
+    def n_handoffs(self) -> int:
+        """Prefill->decode KV handoffs completed (registry view)."""
+        return int(self._c_handoffs.value)
+
+    @property
+    def n_migrated(self) -> int:
+        """Drain migrations completed (registry view)."""
+        return int(self._c_migrated.value)
+
+    @property
+    def handoff_bytes(self) -> int:
+        """Host-side KV bytes moved by migrate() (registry view)."""
+        return int(self._c_handoff_bytes.value)
+
+    @property
+    def handoff_bytes_saved(self) -> int:
+        """Head bytes NOT shipped thanks to prefix reuse (registry view)."""
+        return int(self._c_handoff_saved.value)
+
+    @property
+    def n_tail_handoffs(self) -> int:
+        """Migrations that shipped a partial tail (registry view)."""
+        return int(self._c_tail_handoffs.value)
 
     @classmethod
     def build(cls, cfg, params, n_replicas: Optional[int] = None, *,
@@ -498,13 +544,26 @@ class ReplicaPool:
         assert src != dst
         h = self.frontends[src]._handles.pop(req.rid, None)
         head = self.engines[dst].prefix_head_for(req)
+        # flow-linked hop endpoints: the exporter pairs these two instants
+        # (same flow id) into a Perfetto arrow from src track to dst track.
+        # rid=None — both ends must record or neither (per-rid sampling
+        # could otherwise keep one end and orphan the flow, since the
+        # restored request gets a NEW engine-local rid)
+        self._flow_seq += 1
+        fid = self._flow_seq
+        self.engines[src].obs.instant(
+            "handoff.snapshot", lane="lifecycle", flow=fid,
+            src=src, dst=dst, src_rid=req.rid)
         snap = self.engines[src].snapshot(req, kv_start=head)
-        self.handoff_bytes += snap.kv_bytes
+        self._c_handoff_bytes.inc(snap.kv_bytes)
         if head:
-            self.handoff_bytes_saved += head * kv_row_bytes(
-                self.engines[src])
-            self.n_tail_handoffs += 1
+            self._c_handoff_saved.inc(head * kv_row_bytes(
+                self.engines[src]))
+            self._c_tail_handoffs.inc()
         h = self.frontends[dst].resume(snap, handle=h, src=src, dst=dst)
+        self.engines[dst].obs.instant(
+            "handoff.restore", lane="lifecycle", flow=fid,
+            src=src, dst=dst, dst_rid=h.rid, kv_bytes=snap.kv_bytes)
         h.replica = dst
         return h
 
@@ -563,7 +622,7 @@ class ReplicaPool:
                 if j is None:
                     continue
                 self.migrate(req, i, j)
-                self.n_handoffs += 1
+                self._c_handoffs.inc()
                 moved += 1
         return moved
 
@@ -602,9 +661,23 @@ class ReplicaPool:
                     if j is None:
                         continue
                     self.migrate(req, i, j)
-                    self.n_migrated += 1
+                    self._c_migrated.inc()
                     moved += 1
         return moved
+
+    # -- observability -------------------------------------------------------
+    def recorders(self) -> List:
+        """Per-replica span recorders in replica order — the input
+        ``repro.obs.chrome_trace`` exporters take."""
+        return [e.obs for e in self.engines]
+
+    def metrics_snapshot(self) -> dict:
+        """JSON-ready nested snapshot: pool-level handoff/migration
+        counters plus one registry snapshot per replica engine. Valid
+        under ``validate_metrics_snapshot`` (schema repro.obs.metrics/1)."""
+        return {"schema": METRICS_SCHEMA,
+                "cluster": self.metrics.snapshot(),
+                "replicas": [e.metrics.snapshot() for e in self.engines]}
 
 
 class ClusterFrontend(CooperativeDriver):
@@ -774,18 +847,50 @@ class QosAutopilot:
         self.preempt = preempt
         self.shed: Deque[RequestHandle] = collections.deque(
             maxlen=shed_window)
-        self.n_shed = 0
-        self.by_reason: Dict[str, int] = {"ttft": 0, "tbt": 0}
+        # counters live on the pool registry (cluster front-end) or the
+        # engine's own (plain ServingFrontend); n_shed / by_reason /
+        # n_preempted / n_resumed below are read-only registry views
+        pool = getattr(frontend, "pool", None)
+        reg = pool.metrics if pool is not None else frontend.engine.metrics
+        self._c_shed = {r: reg.counter(
+            "autopilot_shed_total", "requests shed mid-flight, by trigger",
+            reason=r) for r in ("ttft", "tbt")}
+        self._c_preempted = reg.counter(
+            "autopilot_preempted_total",
+            "requests paused host-side by priority preemption")
+        self._c_resumed = reg.counter(
+            "autopilot_resumed_total",
+            "preempted requests resumed after headroom returned")
+        reg.gauge("autopilot_paused_kv_bytes",
+                  "host KV bytes held by currently-paused requests",
+                  fn=lambda: self.paused_kv_bytes)
         # (handle, snapshot) pairs parked by preemption, resumed by scan
         self.paused: List[Tuple[RequestHandle, "RequestSnapshot"]] = []
-        self.n_preempted = 0
-        self.n_resumed = 0
         frontend.autopilot = self
 
     @property
     def paused_kv_bytes(self) -> int:
         """Host bytes of KV held by currently-paused requests."""
         return sum(s.kv_bytes for _, s in self.paused)
+
+    # legacy counter attributes — thin read-only registry views
+    @property
+    def n_shed(self) -> int:
+        """Total requests shed (registry view over both triggers)."""
+        return int(sum(c.value for c in self._c_shed.values()))
+
+    @property
+    def by_reason(self) -> Dict[str, int]:
+        """Shed counts by trigger (fresh dict; registry view)."""
+        return {r: int(c.value) for r, c in self._c_shed.items()}
+
+    @property
+    def n_preempted(self) -> int:
+        return int(self._c_preempted.value)
+
+    @property
+    def n_resumed(self) -> int:
+        return int(self._c_resumed.value)
 
     def scan_into(self, now: Optional[float],
                   events: List) -> List[RequestHandle]:
@@ -811,8 +916,13 @@ class QosAutopilot:
                 continue
             if h.cancel(reason="slo_shed"):
                 self.shed.append(h)
-                self.n_shed += 1
-                self.by_reason[trigger] += 1
+                self._c_shed[trigger].inc()
+                # annotate the shed on the owning engine's timeline with
+                # WHICH SLO trigger fired (the terminal span itself is
+                # recorded by engine.cancel)
+                h._fe.engine_of(h).obs.instant(
+                    "autopilot.shed", lane="lifecycle", rid=h.rid,
+                    trigger=trigger)
                 shed_now.append(h)
         if self.preempt:
             self._scan_preempt()
@@ -840,7 +950,7 @@ class QosAutopilot:
             if j is not None:
                 h.replica = j
             self.paused.remove(item)
-            self.n_resumed += 1
+            self._c_resumed.inc()
         for fe in self._frontends():
             eng = fe.engine
             if eng.slot_available or not len(eng.queue):
@@ -852,9 +962,14 @@ class QosAutopilot:
                 continue
             victim = min(viable, key=lambda r: (r.priority, -r.rid))
             h = fe._handles[victim.rid]
+            # annotate WHY the pause happened (the request.paused instant
+            # itself comes from engine.snapshot inside fe.pause)
+            eng.obs.instant("autopilot.preempt", lane="lifecycle",
+                            rid=victim.rid, priority=victim.priority,
+                            top_priority=top)
             snap = fe.pause(h)
             self.paused.append((h, snap))
-            self.n_preempted += 1
+            self._c_preempted.inc()
 
     def _resume_target(self, snap: RequestSnapshot
                        ) -> Optional[Tuple[ServingFrontend, Optional[int]]]:

@@ -69,7 +69,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -88,10 +88,17 @@ from repro.models import moe_layer as M
 from repro.models import opt_flags
 from repro.models.layers import PDT
 from repro.models.model import attn_dims
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.spans import SpanRecorder
 from repro.serving.api import Event, SamplingParams, TokenEvent
 
+_PERF_FIELDS = ("decode_rows_dense", "decode_rows_grouped",
+                "decode_rows_launched", "decode_ffn_launches",
+                "decode_layers", "prefill_ffn_launches",
+                "prefill_moe_layers")
+_PERF_MAX_FIELD = "max_prefill_launches_per_layer"
 
-@dataclasses.dataclass
+
 class PerfCounters:
     """Measured expert-execution work, filled by the serving engines.
 
@@ -106,15 +113,44 @@ class PerfCounters:
     computed (grouped: after Cmax bucketing, padding included; dense:
     U * B). ``*_ffn_launches`` count expert-FFN kernel dispatches — the
     fused prefill path must keep prefill_ffn_launches == prefill_moe_layers
-    (exactly one launch per layer visit)."""
-    decode_rows_dense: int = 0
-    decode_rows_grouped: int = 0
-    decode_rows_launched: int = 0
-    decode_ffn_launches: int = 0
-    decode_layers: int = 0
-    prefill_ffn_launches: int = 0
-    prefill_moe_layers: int = 0
-    max_prefill_launches_per_layer: int = 0
+    (exactly one launch per layer visit).
+
+    Since the repro.obs migration this is a thin VIEW over the engine's
+    :class:`MetricsRegistry`: every field reads a registry instrument
+    (``engine_<field>_total`` counters; the max is a max-tracking gauge)
+    and mutation goes through ``inc``/``max_update`` only — direct field
+    writes raise here and are rejected statically by the
+    ``obs-discipline`` lint (repro.analysis)."""
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None):
+        reg = registry if registry is not None else MetricsRegistry()
+        object.__setattr__(self, "_c", {
+            f: reg.counter(f"engine_{f}_total",
+                           "expert-execution work (PerfCounters view)")
+            for f in _PERF_FIELDS})
+        object.__setattr__(self, "_gmax", reg.gauge(
+            f"engine_{_PERF_MAX_FIELD}",
+            "largest per-layer prefill FFN launch count seen"))
+
+    def inc(self, field: str, n: int = 1) -> None:
+        self._c[field].inc(n)
+
+    def max_update(self, field: str, v: int) -> None:
+        assert field == _PERF_MAX_FIELD, f"not a max-tracking field: {field}"
+        self._gmax.max_update(v)
+
+    def __getattr__(self, name: str):
+        c = self.__dict__.get("_c", {})
+        if name in c:
+            return int(c[name].value)
+        if name == _PERF_MAX_FIELD:
+            return int(self.__dict__["_gmax"].value)
+        raise AttributeError(name)
+
+    def __setattr__(self, name: str, value) -> None:
+        raise AttributeError(
+            f"PerfCounters.{name} is a registry view — mutate via "
+            f"inc()/max_update()")
 
 
 def _bucket(n: int, cap: int) -> int:
@@ -212,7 +248,8 @@ class EngineCore:
                  cache_capacity: Optional[int] = None,
                  temperature: float = 0.8, sample_seed: int = 0,
                  sched_batch: int = 1, prefill_chunk: Optional[int] = None,
-                 fused_prefill: Optional[bool] = None):
+                 fused_prefill: Optional[bool] = None,
+                 spans: Union[bool, SpanRecorder] = False):
         assert cfg.is_moe and cfg.family in ("moe", "dense"), \
             "engine schedules experts; use bundle.decode for non-MoE archs"
         assert cfg.n_dense_layers == 0, "engine assumes uniform MoE stack"
@@ -240,7 +277,14 @@ class EngineCore:
         self.fused_prefill = (opt_flags.grouped_ffn() if fused_prefill
                               is None else bool(fused_prefill))
         self._grouped_pallas = opt_flags.grouped_ffn()
-        self.perf = PerfCounters()
+        # observability spine (repro.obs): ONE registry per engine is the
+        # home of every number this engine tracks; the span recorder is off
+        # by default (spans=True — or a pre-built SpanRecorder, e.g. with a
+        # sampling rate — turns the lifecycle/phase timeline on)
+        self.metrics = MetricsRegistry()
+        self.obs = (spans if isinstance(spans, SpanRecorder)
+                    else SpanRecorder(enabled=bool(spans)))
+        self.perf = PerfCounters(self.metrics)
         self._rng = np.random.default_rng(sample_seed)
         # event sink: every generated token is emitted as a TokenEvent; the
         # front-ends (serve(), BatchedServingEngine.step()) assemble their
@@ -260,6 +304,20 @@ class EngineCore:
             default_capacity(policy, self.L, self.E, self.k,
                              batch=sched_batch), pin_bound)
         self.cache = ExpertResidency(self.store, capacity=cap)
+        # residency counts surface as PULL gauges — evaluated at snapshot
+        # time off the one ledger, so the cache hot path stays untouched
+        self.metrics.gauge("residency_hits", "expert-cache hits (lifetime)",
+                           fn=lambda: self.cache.hits)
+        self.metrics.gauge("residency_misses",
+                           "expert-cache misses (lifetime)",
+                           fn=lambda: self.cache.misses)
+        self.metrics.gauge("residency_evictions",
+                           "expert slots evicted (lifetime)",
+                           fn=lambda: sum(1 for e in self.cache.events
+                                          if e.kind == "evict"))
+        self.metrics.gauge("residency_device_bytes",
+                           "expert weight bytes resident in HBM",
+                           fn=lambda: self.cache.device_bytes)
         self.sched = make_scheduler(
             policy, self.L, self.E, self.k, self.store.bytes_per_expert,
             stats=stats, predictor=predictor, state_constructor=sc,
@@ -413,14 +471,14 @@ class EngineCore:
         acc = self._shared(self._moe_dev(l), xn)
         order = plan.order
         if order:
-            self.perf.prefill_moe_layers += 1
+            self.perf.inc("prefill_moe_layers")
         if self.fused_prefill and order and ids_np is not None:
             return self._run_experts_prefill_fused(l, xn, w, ids, plan,
                                                    ids_np, acc)
         if order:
-            self.perf.prefill_ffn_launches += len(order)
-            self.perf.max_prefill_launches_per_layer = max(
-                self.perf.max_prefill_launches_per_layer, len(order))
+            self.perf.inc("prefill_ffn_launches", len(order))
+            self.perf.max_update("max_prefill_launches_per_layer",
+                                 len(order))
         # stage fetches according to the plan
         if plan.prefetch_all_first:
             for e in plan.fetches:
@@ -465,9 +523,8 @@ class EngineCore:
         disp = group_by_expert(ids_np, order, bucket_cap=T,
                                u_bucket_cap=min(self.E, T * self.k))
         raw = self._grouped_ffn_raw(l, order, xn, disp.row_idx)  # [U, C, d]
-        self.perf.prefill_ffn_launches += 1
-        self.perf.max_prefill_launches_per_layer = max(
-            self.perf.max_prefill_launches_per_layer, 1)
+        self.perf.inc("prefill_ffn_launches")
+        self.perf.max_update("max_prefill_launches_per_layer", 1)
         zeros = jnp.zeros((T, raw.shape[-1]), jnp.float32)
         for u, e in enumerate(order):
             gate_w = (w * (ids == e)).sum(-1).reshape(-1)
@@ -656,6 +713,7 @@ class MoEServingEngine(EngineCore):
         pred_trace = np.full((max_new, self.L, self.k), -1, np.int32)
         n_dec = 0
         for t in range(max_new):
+            st = self.obs.begin("decode.step", lane="decode", rid=rid)
             tok = jnp.asarray([[out[-1]]], jnp.int32)
             x = self.dev["embed"].at[tok].get(mode="clip")
             pos = jnp.int32(prompt_len + t)
@@ -674,9 +732,14 @@ class MoEServingEngine(EngineCore):
                 np_pred = plan.predicted[: self.k]
                 pred_trace[t, l, : len(np_pred)] = np_pred
                 # correction fetches for misses (sync point #1)
-                for e in plan.misses:
-                    self.cache.prefetch((l, e))
-                    self.cache.wait((l, e))
+                if plan.misses:
+                    pt = self.obs.begin("prefetch.correction",
+                                        lane="prefetch", rid=rid, layer=l,
+                                        n=len(plan.misses))
+                    for e in plan.misses:
+                        self.cache.prefetch((l, e))
+                        self.cache.wait((l, e))
+                    self.obs.end(pt)
                 acc = self._shared(self._moe_dev(l), xn)
                 for e in sel:
                     eslot = jnp.int32(self.cache.slot((l, e)))
@@ -685,6 +748,10 @@ class MoEServingEngine(EngineCore):
                                              gate_w)
                 x = x + acc.reshape(x.shape)
                 # prediction stream: prefetch next layer's predicted experts
+                if plan.prefetch_next:
+                    self.obs.instant("prefetch.dispatch", lane="prefetch",
+                                     rid=rid, layer=l,
+                                     n=len(plan.prefetch_next))
                 for e in plan.prefetch_next:
                     self.cache.prefetch((l + 1, e))
             # the policies end_layer(l) when planning l+1; the LAST layer has
@@ -697,6 +764,7 @@ class MoEServingEngine(EngineCore):
             out.append(tok)
             n_dec = t + 1
             self._emit_token(rid, tok, n_dec)
+            self.obs.end(st, token_id=tok)
             if tok in stop_ids:
                 break
         return (np.asarray(out[1:]), trace[:n_dec], pred_trace[:n_dec])

@@ -32,6 +32,7 @@ from __future__ import annotations
 import time
 from typing import Dict, Iterator, List, Optional
 
+from repro.obs.spans import monotonic
 from repro.serving.api import (Event, FinishEvent, RejectEvent,
                                RequestSnapshot, StepEvents, TokenEvent,
                                as_request_spec)
@@ -165,6 +166,11 @@ class CooperativeDriver:
         req.state = "cancelled"
         req.finish_reason = reason
         req.t_done = time.perf_counter()
+        # the engine never sees this cancel, so record the terminal span
+        # here on the recorder of the engine that last ran the request
+        # (rid is still that engine's — restore would have re-rid'd it)
+        self.engine_of(handle).obs.terminal(req.rid, reason,
+                                            n_tokens=len(req.tokens))
         handle._on_event(FinishEvent(rid=req.rid, reason=reason,
                                      n_tokens=len(req.tokens), t=req.t_done))
         return True
@@ -224,8 +230,11 @@ class ServingFrontend(CooperativeDriver):
         else:
             handle.req = req
             handle.rid = req.rid
+        # t_restore comes from the SAME monotonic clock engine.snapshot
+        # stamped t_snapshot with (repro.obs.spans.monotonic) — handoff
+        # latency is a difference of one clock, never of two
         handle.handoffs.append({
-            "t_snapshot": snap.t_snapshot, "t_restore": time.perf_counter(),
+            "t_snapshot": snap.t_snapshot, "t_restore": monotonic(),
             "src": src, "dst": dst})
         self._handles[req.rid] = handle
         return handle

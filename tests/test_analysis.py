@@ -308,6 +308,82 @@ def test_recompile_allows_static_and_config_bounds(tmp_path):
 
 
 # --------------------------------------------------------------------------
+# obs-discipline
+# --------------------------------------------------------------------------
+
+
+def test_obs_flags_migrated_metric_write(tmp_path):
+    rep = lint_snippet(tmp_path, "serving/cluster.py", """
+        class ReplicaPool:
+            def migrate(self, rid, src, dst):
+                self.n_handoffs += 1
+                return rid
+    """)
+    assert rules_of(rep) == ["obs-discipline"]
+    f = rep.findings[0]
+    assert f.call == "n_handoffs"
+    assert "read-only view" in f.message
+
+
+def test_obs_flags_subscript_write_to_migrated_metric(tmp_path):
+    rep = lint_snippet(tmp_path, "serving/cluster.py", """
+        class QosAutopilot:
+            def scan(self, now, reason):
+                self.by_reason[reason] += 1
+    """)
+    assert rules_of(rep) == ["obs-discipline"]
+    assert rep.findings[0].call == "by_reason"
+
+
+def test_obs_flags_perf_field_write(tmp_path):
+    rep = lint_snippet(tmp_path, "serving/batching.py", """
+        class BatchedServingEngine:
+            def _retire(self, r):
+                self.perf.decode_layers = 0
+    """)
+    assert rules_of(rep) == ["obs-discipline"]
+    f = rep.findings[0]
+    assert f.call == "perf.decode_layers"
+    assert "perf.inc" in f.message
+
+
+def test_obs_flags_span_call_outside_declared_scope(tmp_path):
+    rep = lint_snippet(tmp_path, "serving/batching.py", """
+        class BatchedServingEngine:
+            def _some_helper(self, r):
+                self.obs.instant("request.peeked", "lifecycle", rid=r.rid)
+    """)
+    assert "obs-discipline" in rules_of(rep)
+    f = next(f for f in rep.findings if f.rule == "obs-discipline")
+    assert f.call == "obs.instant"
+    assert "SPAN_SCOPES" in f.message
+
+
+def test_obs_allows_span_calls_in_declared_scopes(tmp_path):
+    rep = lint_snippet(tmp_path, "serving/batching.py", """
+        class BatchedServingEngine:
+            def _retire(self, r):
+                self.obs.terminal(r.rid, r.finish_reason)
+
+            def submit_request(self, r):
+                self.obs.instant("request.queued", "lifecycle", rid=r.rid)
+    """)
+    assert [f for f in rep.findings if f.rule == "obs-discipline"] == []
+
+
+def test_obs_allows_registry_mutation_and_view_reads(tmp_path):
+    rep = lint_snippet(tmp_path, "serving/cluster.py", """
+        class ReplicaPool:
+            def migrate(self, rid, nbytes):
+                self._c_handoffs.inc()
+                self._c_handoff_bytes.inc(nbytes)
+                total = self.n_handoffs + self.handoff_bytes  # reads are fine
+                return total
+    """)
+    assert rep.findings == []
+
+
+# --------------------------------------------------------------------------
 # allowlist mechanics
 # --------------------------------------------------------------------------
 
